@@ -1,0 +1,60 @@
+"""Paper Fig. 10 / Fig. 14: ablation -- add one technique at a time.
+
+Stages (TPU analog of the paper's static-DAG -> +resource graph ->
++adaptive -> +proactive):
+  A  static-DAG:        peak-provisioned, remat none, naive attention,
+                        no ZeRO/FSDP (each "function" holds everything)
+  B  +resource graph:   component decomposition -> ZeRO over the DP group
+  C  +adaptive:         locality ladder (remat/microbatch/FSDP/chunked)
+  D  +proactive:        history-informed sizing (measured bytes feed back)
+
+Derived: estimated GiB/device + roofline-bound step time from profiles.
+"""
+
+from benchmarks.common import row, timeit
+from repro.configs import SHAPES, get_config
+from repro.core.history import HistoryStore
+from repro.core.materializer import (GB, SINGLE_POD,
+                                     estimate_bytes_per_device, materialize)
+from repro.core import profiles as prof
+
+
+def main() -> None:
+    cfg = get_config("qwen2-moe-a2.7b")
+    shape = SHAPES["train_4k"]
+    mesh = SINGLE_POD
+
+    stages = {
+        "A_static_dag": dict(zero=False, fsdp=False, remat="none",
+                             microbatch=1, attn_impl="naive"),
+        "B_resource_graph": dict(zero=True, fsdp=False, remat="none",
+                                 microbatch=1, attn_impl="naive"),
+        "C_adaptive": None,           # full ladder
+        "D_proactive": "history",     # ladder + measured history
+    }
+    hist = HistoryStore()
+    hist.observe(cfg.name, f"{shape.name}/{mesh.name}", "bytes_per_device",
+                 9.5 * GB)
+
+    for name, spec in stages.items():
+        if spec == "history":
+            us = timeit(lambda: materialize(cfg, shape, mesh, history=hist),
+                        iters=5)
+            plan = materialize(cfg, shape, mesh, history=hist)
+        elif spec is None:
+            us = timeit(lambda: materialize(cfg, shape, mesh), iters=5)
+            plan = materialize(cfg, shape, mesh)
+        else:
+            plan = materialize(cfg, shape, mesh, overrides=spec)
+            us = timeit(lambda: materialize(cfg, shape, mesh, overrides=spec),
+                        iters=5)
+        est = estimate_bytes_per_device(cfg, shape, plan)
+        flops = prof.step_model_flops(cfg, shape) / mesh.num_devices
+        t_bound = flops / mesh.peak_flops
+        row(f"fig10_ablation/{name}", us,
+            f"est={est/GB:.2f}GiB;compute_bound={t_bound*1e3:.1f}ms;"
+            f"remat={plan.remat};mb={plan.microbatch};fsdp={plan.fsdp}")
+
+
+if __name__ == "__main__":
+    main()

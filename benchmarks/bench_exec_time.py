@@ -1,0 +1,41 @@
+"""Paper Fig. 9 + Fig. 20: execution time, adaptive vs baselines.
+
+CPU container cannot measure TPU wall time; the comparable quantity is the
+roofline step-time bound max(compute, memory, collective) from the
+compiled dry-run artifacts (§Roofline).  Rows report the bound under the
+adaptive plan for each architecture's train cell, plus MODEL_FLOPS-derived
+MFU upper bound -- the quantity §Perf hillclimbs.
+
+Derived: bound breakdown + dominant term."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def main() -> None:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*__single_pod.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("status") == "ok":
+            cells.append(c)
+    if not cells:
+        row("fig9_exec_time/NO_ARTIFACTS", 0.0,
+            "run `python -m repro.launch.dryrun` first")
+        return
+    for c in cells:
+        r = c["roofline"]
+        bound = r["step_time_bound_s"]
+        row(f"fig9_exec_time/{c['arch']}/{c['shape']}", bound * 1e6,
+            f"dom={r['dominant']};cmp={r['compute_term_s']:.3f}s;"
+            f"mem={r['memory_term_s']:.3f}s;col={r['collective_term_s']:.3f}s;"
+            f"mfu_ub={r['mfu_upper_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

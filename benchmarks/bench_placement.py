@@ -1,0 +1,79 @@
+"""Paper Fig. 21: adaptive placement -- local / remote-scale / disagg.
+
+The paper runs a fan-in ReduceBy with data components local, partially
+remote, or fully disaggregated, showing I/O movement dominating as more
+components go remote.  TPU analog on a decode cell's KV data component:
+
+  * local        : KV heads co-located with their attention computes
+                   (head-sharded; zero cross-chip KV traffic)
+  * remote-scale : KV sequence-sharded; partial-softmax combines cross chips
+  * disagg       : KV fully replicated-remote (batch-only sharding; every
+                   access crosses the ICI)
+
+Measured from fresh dry-run lowerings of whisper-base decode (small, fast
+compile).  Derived: collective bytes/device + roofline collective term."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import row
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def main() -> None:
+    # run in a subprocess: needs the 512-device dry-run environment
+    code = r"""
+import json
+from repro.configs.base import get_config, SHAPES
+from repro.core.materializer import MESHES, materialize
+from repro.launch.mesh import make_mesh_from_spec
+from repro.launch.dryrun import lower_cell, collective_stats, memory_footprint
+import dataclasses, jax
+
+cfg = get_config("whisper-base")
+shape = SHAPES["decode_32k"]
+spec = MESHES["single_pod"]
+mesh = make_mesh_from_spec(spec)
+variants = {
+  "local_headshard":  {"kv_shard_heads": True,  "kv_shard_seq": False},
+  "remote_seqshard":  {"kv_shard_heads": False, "kv_shard_seq": True},
+  "disagg_replicated":{"kv_shard_heads": False, "kv_shard_seq": False},
+}
+out = {}
+for name, ov in variants.items():
+    plan = materialize(cfg, shape, spec, overrides=ov)
+    l, _ = lower_cell(cfg, shape, plan, mesh)
+    c = l.compile()
+    cs = collective_stats(c.as_text())
+    mem = memory_footprint(c)
+    out[name] = {
+        "coll_bytes": sum(d["bytes"] for d in cs.values()),
+        "coll_counts": {k: d["count"] for k, d in cs.items() if d["count"]},
+        "peak": mem["peak_tpu_adjusted"],
+    }
+    jax.clear_caches()
+print("RESULT" + json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC, TF_CPP_MIN_LOG_LEVEL="3")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    payload = None
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT"):
+            payload = json.loads(line[len("RESULT"):])
+    if payload is None:
+        row("fig21_placement/ERROR", 0.0, r.stderr[-200:].replace(",", ";"))
+        return
+    for name, d in payload.items():
+        term = d["coll_bytes"] / 50e9
+        row(f"fig21_placement/{name}", term * 1e6,
+            f"coll_bytes={d['coll_bytes']};peak={d['peak']/2**30:.2f}GiB;"
+            f"counts={d['coll_counts']}".replace(",", "|"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Fig. 18: runtime scaling technologies under input growth.
+
+BulkX compares adaptive materialization vs always-remote disaggregation
+(swap) vs live migration.  TPU analogs for a component whose memory demand
+grows with the input (the Join stage -> longer sequence):
+
+  * adaptive      : re-materialize (remat/microbatch adjust) -- recompute
+                    overhead only where needed
+  * swap_all      : host-offload every activation (bandwidth-bound)
+  * migrate       : move the whole job to a bigger allocation: pay full
+                    state transfer at DCN bandwidth (best case, like the
+                    paper's pure-data-movement migration bound)
+
+Derived: modelled overhead seconds per step at each scale factor, from the
+same hardware constants as §Roofline (HBM 819 GB/s, PCIe-class host link
+~50 GB/s, DCN ~25 GB/s/pod).
+"""
+
+import dataclasses
+
+from benchmarks.common import row, timeit
+from repro.configs import SHAPES, get_config
+from repro.core import profiles as prof
+from repro.core.materializer import GB, SINGLE_POD, materialize
+
+HOST_BW = 50e9
+DCN_BW = 25e9
+
+
+def main() -> None:
+    cfg = get_config("mistral-nemo-12b")
+    base = SHAPES["train_4k"]
+    mesh = SINGLE_POD
+    for sf in (1, 4, 8):
+        shape = dataclasses.replace(base, seq_len=base.seq_len * sf,
+                                    global_batch=max(base.global_batch // sf, 32))
+        us = timeit(lambda: materialize(cfg, shape, mesh), iters=3)
+        plan = materialize(cfg, shape, mesh)
+        # adaptive: recompute overhead = extra fwd pass when remat=full
+        flops_dev = prof.step_model_flops(cfg, shape) / mesh.num_devices
+        recompute = {"none": 0.0, "dots": 0.12, "full": 0.33}[plan.remat]
+        t_adapt = flops_dev / mesh.peak_flops * recompute
+        # swap-all: every saved activation crosses the host link
+        act = prof.activation_bytes_train(cfg, shape, "none", 1,
+                                          plan.attn_impl) / mesh.num_devices
+        t_swap = 2 * act / HOST_BW
+        # migration best case: move params+opt once per growth event
+        state = (prof.param_bytes(cfg) + prof.optimizer_bytes(cfg)) \
+            / mesh.num_devices
+        t_migrate = state / DCN_BW
+        row(f"fig18_scaling/sf{sf}", us,
+            f"adaptive={t_adapt:.3f}s;swap={t_swap:.3f}s;"
+            f"migrate={t_migrate:.3f}s;plan_remat={plan.remat};"
+            f"mb={plan.microbatch}")
+
+
+if __name__ == "__main__":
+    main()

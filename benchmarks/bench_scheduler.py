@@ -1,0 +1,22 @@
+"""Paper §6.2 scheduler scalability: 50k invocations/s global, 20k
+components/s per rack.  Replays arrival traces through the two-level
+scheduler (pure decision throughput, like the paper's measurement).
+
+Derived: scheduling ops/s vs the paper's claimed rates."""
+
+from benchmarks.common import row
+from repro.core.scheduler import measure_scheduler_throughput
+
+
+def main() -> None:
+    for n_jobs, pods in ((20_000, 4), (50_000, 8), (100_000, 16)):
+        stats = measure_scheduler_throughput(n_jobs=n_jobs, num_pods=pods)
+        rate = stats["sched_ops_per_s"]
+        row(f"sched_scalability/jobs{n_jobs}_pods{pods}",
+            1e6 / max(rate, 1),
+            f"ops_per_s={rate:.0f};paper_global=50000;paper_rack=20000;"
+            f"finished={stats['finished']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 22 + Fig. 26: sizing strategies on Azure-like workloads.
+
+Four workload classes from the paper's appendix (Small / Large / Varying /
+Stable invocation-memory distributions) replayed under three policies:
+fixed (256/64 analog), peak-provision, history-LP (§9.3).
+
+Derived: mean utilization + mean completion time (the Fig. 22 axes).
+"""
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.sizing import (fixed_sizing, peak_sizing, simulate_policy,
+                               solve_init_step)
+
+RNG = np.random.default_rng(42)
+
+WORKLOADS = {
+    "small": RNG.gamma(2.0, 2.0, 500).clip(1, 40),
+    "large": (200 + RNG.gamma(3.0, 20.0, 500)).clip(1, 900),
+    "varying": np.exp(RNG.normal(3.0, 1.2, 500)).clip(1, 1200),
+    "stable": (64 + RNG.normal(0, 2.0, 500)).clip(32, 96),
+}
+
+
+def main() -> None:
+    for wname, usage in WORKLOADS.items():
+        hist = [(float(v), 1.0) for v in usage]
+        us = timeit(lambda: solve_init_step(hist), iters=3)
+        policies = {
+            "fixed": fixed_sizing(4.0, 1.0),
+            "peak": peak_sizing(hist),
+            "history": solve_init_step(hist, cost_factor=0.3,
+                                       waste_threshold=0.5),
+        }
+        for pname, sol in policies.items():
+            sim = simulate_policy(usage, sol)
+            row(f"fig22_sizing/{wname}/{pname}",
+                us if pname == "history" else 0.0,
+                f"util={sim['mean_utilization']:.2f};"
+                f"time={sim['mean_time']:.1f};"
+                f"scaleups={sim['mean_scaleups']:.2f};"
+                f"init={sol.init:.0f};step={sol.step:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Figs. 15-17 + 27-28: the logistic-regression / small-function
+comparison -- real measured steps on CPU with a small model.
+
+Systems compared (paper's OpenWhisk / FastSwap / StepFunctions analogs):
+  * zenix_adaptive : materialized plan (remat/microbatch as the ladder says)
+  * peak_monolith  : remat none (holds everything; the one-big-function)
+  * stage_isolated : microbatch=4 without accumulation fusion analog --
+                     modelled by remat='full' + microbatch=4 (pays
+                     recompute/"serialization" between stages)
+
+Derived: measured step wall time + working-set estimate.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import block, row, timeit
+from repro.configs import get_config
+from repro.core.materializer import (GB, SINGLE_POD, Plan,
+                                     estimate_bytes_per_device)
+from repro.configs.base import ShapeConfig
+from repro.models import ImplConfig, build_model
+from repro.training import optimizer as opt
+from repro.training.train_step import make_train_step
+
+
+def reduced(cfg):
+    return cfg.scaled(num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+                      head_dim=32, d_ff=256, vocab_size=512)
+
+
+def main() -> None:
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    shape = ShapeConfig("small", "train", 64, 8)
+    rng = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(rng, (8, 64), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (8, 64), 0, cfg.vocab_size)}
+
+    plans = {
+        "zenix_adaptive": Plan("t", "small", SINGLE_POD, remat="none",
+                               microbatch=1, zero=True),
+        "peak_monolith": Plan("t", "small", SINGLE_POD, remat="none",
+                              microbatch=1, zero=False),
+        "stage_isolated": Plan("t", "small", SINGLE_POD, remat="full",
+                               microbatch=4, zero=False),
+    }
+    for name, plan in plans.items():
+        model = build_model(cfg, ImplConfig(remat=plan.remat))
+        params = model.init_params(rng)
+        opt_state = opt.init_opt_state(params)
+        step = jax.jit(make_train_step(model, plan))
+        p, o, m = step(params, opt_state, batch)  # compile+warm
+        def run():
+            nonlocal p, o
+            p, o, mm = step(p, o, batch)
+            block(mm["loss"])
+        us = timeit(run, warmup=1, iters=5)
+        est = estimate_bytes_per_device(cfg, shape, plan)
+        row(f"fig15_small_jobs/{name}", us,
+            f"est_state={est/1e6:.1f}MB;remat={plan.remat};mb={plan.microbatch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark helpers: timing + CSV row emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
+the figure-specific metric, e.g. %-memory-saved)."""
+
+import sys
+import time
+from typing import Callable, Optional
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def block(x):
+    import jax
+    return jax.block_until_ready(x)

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d)."""
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_memory_adaptation",   # Fig 8 / 19
+    "benchmarks.bench_exec_time",           # Fig 9 / 20 (roofline bound)
+    "benchmarks.bench_ablation",            # Fig 10 / 14
+    "benchmarks.bench_serving_pipeline",    # Fig 11-13
+    "benchmarks.bench_small_jobs",          # Fig 15-17 / 27-28
+    "benchmarks.bench_scaling_methods",     # Fig 18
+    "benchmarks.bench_placement",           # Fig 21
+    "benchmarks.bench_sizing",              # Fig 22 / 26
+    "benchmarks.bench_startup",             # Fig 23 / cold-warm table
+    "benchmarks.bench_scheduler",           # §6.2 scheduler scalability
+    "benchmarks.bench_kernels",             # kernel validation timings
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for mod in MODULES:
+        if only and only not in mod:
+            continue
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:
+            failures += 1
+            print(f"{mod},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

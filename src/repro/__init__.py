@@ -1,0 +1,5 @@
+"""Zenix: resource-centric adaptive execution for bulky training/serving
+jobs on TPU pods (JAX).  Reproduction of "BulkX / Zenix: Efficient Execution
+of Bulky Serverless Applications" adapted to the TPU/JAX substrate."""
+
+__version__ = "0.1.0"

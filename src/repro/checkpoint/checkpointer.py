@@ -1,0 +1,191 @@
+"""Sharded checkpointing with atomic commit and elastic restore.
+
+Failure-handling substrate (paper §5.3.2 adapted): a *cut* of the training
+resource graph is the optimizer update -- params + optimizer state + step +
+data cursor fully determine everything downstream, so persisting them at a
+cut gives at-least-once recovery without replaying the whole job.
+
+Layout (one directory per step):
+    ckpt_dir/step_000123.tmp/   -> written, fsynced
+        manifest.json            (tree structure, shapes, dtypes, hashes)
+        arr_00000.npy ...        (one file per leaf, host-local shard)
+    ckpt_dir/step_000123/        (atomic rename = commit record)
+
+Restore supports *elastic resharding*: arrays are loaded as full logical
+values and re-placed under the (possibly different) target mesh's
+shardings, so a job checkpointed on 512 chips restarts on 256 (the
+resource-centric re-materialization of the same graph on fewer resources).
+Writes happen on a background thread (async checkpointing) so the step
+loop is not blocked."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _to_savable(arr: np.ndarray):
+    """numpy can't serialize bfloat16: store as uint16 + logical dtype."""
+    if arr.dtype == _BF16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_saved(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical == "bfloat16":
+        return arr.view(_BF16)
+    return arr
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> str:
+    """Blocking save with atomic commit.  Returns the committed path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (key, leaf) in enumerate(_flatten_with_paths(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        arr_s, logical = _to_savable(arr)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr_s, allow_pickle=False)
+        with open(os.path.join(tmp, fname), "rb") as f:
+            digest = hashlib.sha256(f.read(1 << 20)).hexdigest()[:16]
+        manifest["leaves"].append({
+            "key": key, "file": fname, "shape": list(arr.shape),
+            "dtype": logical, "hash_head": digest})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)          # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int], like: Any,
+                       shardings: Optional[Any] = None,
+                       ) -> Tuple[Any, Dict, int]:
+    """Restore into the structure of ``like`` (validates shapes/dtypes).
+
+    ``shardings``: optional matching tree of NamedShardings -- restoring
+    under a different mesh re-places every leaf (elastic restart)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for ent in manifest["leaves"]:
+        raw = np.load(os.path.join(path, ent["file"]), allow_pickle=False)
+        leaves[ent["key"]] = _from_saved(raw, ent["dtype"])
+    like_flat = _flatten_with_paths(like)
+    out_leaves = []
+    shard_flat = (None if shardings is None
+                  else [s for _, s in _flatten_with_paths(shardings)])
+    for i, (key, leaf) in enumerate(like_flat):
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = leaves[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"restore target {want_shape}")
+        dtype = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else arr.dtype
+        if arr.dtype != dtype:
+            arr = arr.astype(dtype)
+        if shard_flat is not None and shard_flat[i] is not None:
+            out_leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out_leaves.append(jax.device_put(arr))
+    treedef = jax.tree.structure(like)
+    return (jax.tree.unflatten(treedef, out_leaves), manifest["extra"],
+            step)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: List[int] = []
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False):
+        self.wait()
+        # snapshot to host BEFORE returning control (consistent cut)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+                self.saved_steps.append(step)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def _gc(self):
+        steps = sorted(self.saved_steps)
+        while len(steps) > self.keep:
+            s = steps.pop(0)
+            path = os.path.join(self.ckpt_dir, f"step_{s:08d}")
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            self.saved_steps.remove(s)

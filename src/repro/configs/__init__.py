@@ -1,0 +1,24 @@
+"""Architecture config registry.  Importing this package registers all
+assigned architectures."""
+
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, ShapeConfig,
+                                SHAPES, get_config, list_archs, all_cells,
+                                shape_applicable)
+
+# one module per assigned architecture
+from repro.configs import whisper_base      # noqa: F401
+from repro.configs import rwkv6_7b          # noqa: F401
+from repro.configs import gemma3_12b        # noqa: F401
+from repro.configs import command_r_35b     # noqa: F401
+from repro.configs import mistral_nemo_12b  # noqa: F401
+from repro.configs import tinyllama_1_1b    # noqa: F401
+from repro.configs import zamba2_2_7b       # noqa: F401
+from repro.configs import qwen2_moe_a2_7b   # noqa: F401
+from repro.configs import dbrx_132b         # noqa: F401
+from repro.configs import phi3_vision_4_2b  # noqa: F401
+
+ALL_ARCHS = list_archs()
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "get_config", "list_archs", "all_cells", "shape_applicable",
+           "ALL_ARCHS"]

@@ -1,0 +1,222 @@
+"""Configuration system for Zenix.
+
+Zenix (paper text: "BulkX") is a *resource-centric* adaptive execution
+framework.  A ``ModelConfig`` describes an architecture ("application" in the
+paper's terms); a ``ShapeConfig`` describes one invocation's input shape.  The
+pair (arch x shape) is an *invocation class*: the materializer adapts the
+physical execution plan per invocation class, exactly as the paper adapts
+resource allocation per invocation.
+
+All architecture configs come from public literature; the exact numbers are
+pinned by the assignment (see DESIGN.md for sources / verified tiers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Block kinds: the repeating-pattern units a model is built from.  A model's
+# layer stack is ``pattern * repeat`` (+ optional prologue/epilogue).  The
+# resource graph has one compute component per pattern entry.
+# ---------------------------------------------------------------------------
+ATTN_GLOBAL = "attn_global"        # full causal self attention
+ATTN_LOCAL = "attn_local"          # sliding-window self attention
+ATTN_SHARED = "attn_shared"        # weight-shared attention block (zamba2)
+RWKV6 = "rwkv6"                    # RWKV-6 "Finch" time-mix + channel-mix
+MAMBA2 = "mamba2"                  # Mamba-2 SSD block
+MOE = "moe"                        # MoE FFN block (attention + routed experts)
+ENC_ATTN = "enc_attn"              # bidirectional encoder self attention
+DEC_ATTN = "dec_attn"              # decoder self attention + cross attention
+
+SUBQUADRATIC_KINDS = {RWKV6, MAMBA2, ATTN_LOCAL}
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden size
+    num_shared_experts: int = 0
+    d_shared_expert: int = 0           # hidden size of the shared-expert MLP
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    @property
+    def active_experts(self) -> int:
+        return self.top_k
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64                # N: per-head SSM state size
+    head_dim: int = 64                 # P: channels per SSM head
+    expand: int = 2                    # mamba expansion factor
+    conv_width: int = 4                # depthwise conv width
+    chunk_size: int = 128              # SSD / linear-attn chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # default d_model // num_heads
+    # Repeating structural pattern. E.g. gemma3: 5x local + 1x global.
+    # The full stack is ``pattern`` repeated ``num_layers/len(pattern)`` times
+    # (except encdec, where num_layers counts one side).
+    pattern: Tuple[str, ...] = (ATTN_GLOBAL,)
+    sliding_window: int = 0            # >0 for ATTN_LOCAL entries
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    use_qk_norm: bool = False
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # enc-dec only
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0           # frames/patches produced by frontend stub
+    # vlm only
+    num_image_tokens: int = 0
+    # max trained context (informational)
+    max_context: int = 131_072
+    dtype: str = "bfloat16"
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_layers % len(self.pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern length {len(self.pattern)}")
+
+    # -- derived quantities used by resource profiles ----------------------
+    @property
+    def num_blocks(self) -> int:
+        """Number of repeating pattern blocks (scan length)."""
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family in ("encdec", "audio") and self.num_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k in (RWKV6, MAMBA2) for k in self.pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode over >=500k context is sub-quadratic / bounded-KV.
+
+        Pure full-attention architectures are skipped for ``long_500k`` per
+        the assignment; SSM / hybrid / mostly-local stacks run it: full-KV
+        blocks (global/shared attention, MoE-attn, enc-dec) must be a small
+        minority (<= 1/4) of the pattern."""
+        full_kv = (ATTN_GLOBAL, ATTN_SHARED, MOE, DEC_ATTN, ENC_ATTN)
+        n_full = sum(1 for k in self.pattern if k in full_kv)
+        return n_full * 4 <= len(self.pattern)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path (whisper is enc-dec)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and profiles)."""
+        from repro.core.profiles import model_param_count
+        return model_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.core.profiles import model_active_param_count
+        return model_active_param_count(self)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """Return a reduced copy (smoke tests)."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch x shape) is a runnable cell, with a reason if not."""
+    if shape.name == "long_500k" and not model.supports_long_context:
+        return False, ("pure full-attention stack: 500k-token decode KV is "
+                       "not sub-quadratic-bounded; skipped per assignment")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # import config modules lazily on first miss
+        import repro.configs  # noqa: F401  (triggers registration)
+        if name not in _REGISTRY:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def all_cells(mesh_names: Sequence[str] = ("single_pod", "multi_pod")):
+    """Every runnable (arch x shape x mesh) cell + documented skips."""
+    cells, skips = [], []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                skips.append((arch, sname, why))
+                continue
+            for mesh in mesh_names:
+                cells.append((arch, sname, mesh))
+    return cells, skips

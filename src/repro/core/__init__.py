@@ -1,0 +1,14 @@
+from repro.core.graph import ResourceGraph, build_resource_graph
+from repro.core.history import HistoryStore, DecayedHistogram
+from repro.core.materializer import (MeshSpec, Plan, materialize, escalate,
+                                     SINGLE_POD, MULTI_POD, MESHES)
+from repro.core.sizing import solve_init_step, SizingSolution
+from repro.core.scheduler import GlobalScheduler, PodScheduler, PodState, Job
+from repro.core.compile_cache import CompileCache, plan_layout_key
+from repro.core import annotations
+
+__all__ = ["ResourceGraph", "build_resource_graph", "HistoryStore",
+           "DecayedHistogram", "MeshSpec", "Plan", "materialize", "escalate",
+           "SINGLE_POD", "MULTI_POD", "MESHES", "solve_init_step",
+           "SizingSolution", "GlobalScheduler", "PodScheduler", "PodState",
+           "Job", "CompileCache", "plan_layout_key", "annotations"]

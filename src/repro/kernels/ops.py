@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) ``interpret=True`` executes the kernel bodies in Python
+for correctness validation.  ``flash_attention`` wires the fwd/bwd kernels
+through jax.custom_vjp so training uses the kernel gradient path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import rwkv6_scan as _rwkv
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, H, S, D); k, v: (B, KVH, S, D) -> (B, H, S, D)."""
+    o, _ = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_interpret())
+    return o
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+    o, lse = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=_interpret())
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, window=0, block_q=128,
+                         block_k=128):
+    """(B, S, H, D)-layout convenience wrapper (model-layer layout)."""
+    o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal, window,
+                        block_q, block_k)
+    return o.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# decode attention / scans / norm (inference or fwd-only paths)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, valid_len, *, block_s: int = 512):
+    return _dec.decode_attention(q, k, v, valid_len, block_s=block_s,
+                                 interpret=_interpret())
+
+
+def rwkv6_wkv(r, k, v, logw, u, *, chunk: int = 128):
+    return _rwkv.rwkv6_wkv(r, k, v, logw, u, chunk=chunk,
+                           interpret=_interpret())
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128):
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                         interpret=_interpret())
+
+
+def rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 128):
+    return _rms.rmsnorm(x, gain, eps=eps, block_rows=block_rows,
+                        interpret=_interpret())
+
+
+def paged_attention(q, k_pages, v_pages, page_table, valid_len):
+    return _paged.paged_attention(q, k_pages, v_pages, page_table, valid_len,
+                                  interpret=_interpret())

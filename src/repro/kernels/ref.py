@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (exact, unchunked math).
+
+Each oracle is the semantic ground truth the kernels are tested against in
+tests/test_kernels.py across shape/dtype sweeps."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,S,D); k,v: (B,KVH,S,D) -> (B,H,S,D).  Full softmax oracle."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window > 0:
+        mask = mask & (ki > qi - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q: (B,H,D); k,v: (B,KVH,S,D); valid_len () or (B,) -> (B,H,D)."""
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    vlen = jnp.broadcast_to(jnp.asarray(valid_len), (b,))
+    mask = jnp.arange(s)[None, None, :] < vlen[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u) -> Tuple[jax.Array, jax.Array]:
+    """Per-timestep recurrence oracle.  r,k,v,logw: (B,H,S,hd); u: (H,hd).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t;  o_t = r_t (S_{t-1} + u . k_t^T v_t)
+    Returns (o (B,H,S,hd) fp32, final state (B,H,hd,hd) fp32)."""
+    b, h, s, hd = r.shape
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + u32[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, o
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r32, k32, v32, w))
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    state, o = jax.lax.scan(step, state0, xs)
+    return o.transpose(1, 2, 0, 3), state
+
+
+def ssd_ref(x, dt, a, b, c) -> Tuple[jax.Array, jax.Array]:
+    """Per-timestep SSD oracle.  x: (B,H,S,P); dt,a: (B,H,S); b,c: (B,S,N).
+
+    h_t = exp(a_t) h_{t-1} + dt_t B_t x_t^T;  y_t = C_t h_t
+    Returns (y (B,H,S,P) fp32, final state (B,H,P,N) fp32)."""
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, at, bt, ct = inp                  # (B,H,P), (B,H), .., (B,N)
+        upd = dtt[..., None, None] * jnp.einsum("bhp,bn->bhpn", xt, bt)
+        state = state * jnp.exp(at)[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (x32.transpose(2, 0, 1, 3), dt32.transpose(2, 0, 1),
+          a32.transpose(2, 0, 1), b32.transpose(1, 0, 2),
+          c32.transpose(1, 0, 2))
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    state, y = jax.lax.scan(step, state0, xs)
+    return y.transpose(1, 2, 0, 3), state
+
+
+def rmsnorm_ref(x, gain, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * (1.0 + gain.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input per (arch x shape).
+
+No device allocation: the dry-run lowers against these structs.  Modality
+frontends are stubs per the assignment: whisper gets precomputed frame
+embeddings (B, 1500, D); phi-3-vision gets CLIP patch features (B, 576,
+1024) and a correspondingly shorter text segment within the seq budget.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    n_img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    s_text = s - n_img
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+    }
+    if cfg.is_encdec:
+        out["enc_feats"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if n_img:
+        out["img_feats"] = jax.ShapeDtypeStruct((b, n_img, 1024), jnp.bfloat16)
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    n_img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    out = {"tokens": jax.ShapeDtypeStruct((b, s - n_img), jnp.int32)}
+    if cfg.is_encdec:
+        out["enc_feats"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if n_img:
+        out["img_feats"] = jax.ShapeDtypeStruct((b, n_img, 1024), jnp.bfloat16)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.core.materializer import MESHES, MULTI_POD, SINGLE_POD, MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_spec(spec: MeshSpec) -> Mesh:
+    return jax.make_mesh(spec.shape, spec.axes,
+                         axis_types=(AxisType.Auto,) * len(spec.axes))
+
+
+def mesh_spec(name: str) -> MeshSpec:
+    return MESHES[name]
+
+
+def make_local_mesh(axes: Tuple[str, ...] = ("data", "model"),
+                    shape: Optional[Tuple[int, ...]] = None) -> Mesh:
+    """Mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,4 @@
+from repro.models.model import Model, build_model
+from repro.models.transformer import ImplConfig
+
+__all__ = ["Model", "build_model", "ImplConfig"]

@@ -1,0 +1,201 @@
+"""Mamba-2 block (SSD: state-space duality, chunked algorithm).
+
+Selective SSM with scalar-per-head decay:
+
+    h_t = exp(a_t) h_{t-1} + dt_t * B_t x_t^T      (h: (H, P, N))
+    y_t = C_t h_t + D x_t
+
+with a_t = -exp(A_log) * dt_t, dt_t = softplus(dt_raw + dt_bias).
+
+Training/prefill uses the chunked SSD form: intra-chunk attention-like term
+plus inter-chunk state carry (scan over chunks).  Decode is the single-step
+recurrence, so the state is constant-size (long_500k runs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, rms_norm
+
+Params = Dict[str, Any]
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.head_dim, ssm.state_dim
+
+
+def mamba2_specs(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, h, p_dim, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n  # x, B, C share the depthwise conv
+    return {
+        "w_in_z": Spec((d, d_inner), ("embed", "ssm_inner")),
+        "w_in_x": Spec((d, d_inner), ("embed", "ssm_inner")),
+        "w_in_b": Spec((d, n), ("embed", "ssm_state")),
+        "w_in_c": Spec((d, n), ("embed", "ssm_state")),
+        "w_in_dt": Spec((d, h), ("embed", "ssm_heads")),
+        "conv_w": Spec((cfg.ssm.conv_width, conv_dim), ("conv_w", "ssm_conv")),
+        "conv_b": Spec((conv_dim,), ("ssm_conv",), std=0.0),
+        "a_log": Spec((h,), ("ssm_heads",), std=0.02),
+        "dt_bias": Spec((h,), ("ssm_heads",), std=0.02),
+        "d_skip": Spec((h,), ("ssm_heads",), std=0.02),
+        "norm": Spec((d_inner,), ("ssm_inner",), std=0.0),
+        "w_out": Spec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C).  Returns
+    (y, new_conv_state (B, K-1, C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b_in: jax.Array, c_in: jax.Array, state: jax.Array,
+                chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H) fp32; b_in, c_in: (B, S, N);
+    state: (B, H, P, N) fp32.  Returns (y (B,S,H,P), new_state).
+    """
+    bsz, s, h, p_dim = xh.shape
+    n = b_in.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        # zero-pad: dt=0 => no state update and a=0 => no decay
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nchunks = s // c
+    CLAMP = -30.0
+
+    a = (-jnp.exp(a_log.astype(jnp.float32)))[None, None, :] * dt  # (B,S,H)
+
+    def per_chunk(state, inp):
+        xc, dtc, ac, bc, cc = inp  # (B,C,H,P), (B,C,H), (B,C,H), (B,C,N) x2
+        csum = jnp.cumsum(ac, axis=1)                       # (B,C,H) inclusive
+        total = csum[:, -1:]                                # (B,1,H)
+        dec_in = jnp.exp(jnp.maximum(csum, CLAMP))          # decay through t
+        dec_out = jnp.exp(jnp.maximum(total - csum, CLAMP))
+        x32 = xc.astype(jnp.float32)
+        b32 = bc.astype(jnp.float32)
+        c32 = cc.astype(jnp.float32)
+
+        # inter-chunk: y_inter[t] = dec_in[t] * C_t @ state
+        ch = jnp.einsum("bcn,bhpn->bchp", c32, state)
+        y_inter = ch * dec_in[..., None]
+
+        # intra-chunk: y[t] += sum_{s<=t} exp(csum[t]-csum[s]) dt_s
+        #                       (C_t . B_s) x_s
+        att = jnp.einsum("bcn,bsn->bcs", c32, b32)          # (B,C,C)
+        pair = jnp.exp(jnp.clip(csum[:, :, None, :] - csum[:, None, :, :],
+                                CLAMP, -CLAMP))             # (B,C,C,H)
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32))
+        w = att[..., None] * pair * tri[None, :, :, None]   # (B,C,C,H)
+        y_intra = jnp.einsum("bcsh,bsh,bshp->bchp", w, dtc, x32)
+
+        # state update
+        kdec = (dtc * dec_out)[..., None] * b32[:, :, None, :]  # (B,C,H,N)
+        new_state = state * jnp.exp(jnp.maximum(total, 2 * CLAMP))[:, 0, :, None, None] \
+            + jnp.einsum("bchn,bchp->bhpn", kdec, x32)
+        return new_state, y_inter + y_intra
+
+    xs = (xh.reshape(bsz, nchunks, c, h, p_dim).transpose(1, 0, 2, 3, 4),
+          dt.reshape(bsz, nchunks, c, h).transpose(1, 0, 2, 3),
+          a.reshape(bsz, nchunks, c, h).transpose(1, 0, 2, 3),
+          b_in.reshape(bsz, nchunks, c, n).transpose(1, 0, 2, 3),
+          c_in.reshape(bsz, nchunks, c, n).transpose(1, 0, 2, 3))
+    state, y = jax.lax.scan(jax.remat(per_chunk), state, xs)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p_dim)
+    if pad:
+        y = y[:, : s - pad]
+    return y, state
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int):
+    d_inner, h, p_dim, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    k = cfg.ssm.conv_width
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, p_dim, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, k - 1, conv_dim), jnp.bfloat16),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        mamba_state_specs(cfg, batch))
+
+
+def _projections(p: Params, x: jax.Array, cfg: ModelConfig,
+                 conv_state: Optional[jax.Array]):
+    d_inner, h, p_dim, n = mamba_dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x, p["w_in_z"])
+    xbc = jnp.concatenate([
+        jnp.einsum("bsd,di->bsi", x, p["w_in_x"]),
+        jnp.einsum("bsd,dn->bsn", x, p["w_in_b"]),
+        jnp.einsum("bsd,dn->bsn", x, p["w_in_c"])], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xh = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner: d_inner + n]
+    c_in = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_in_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xh, b_in, c_in, dt, new_conv
+
+
+def mamba2_train(p: Params, x: jax.Array, cfg: ModelConfig,
+                 chunk: int = 128) -> jax.Array:
+    bsz, s, _ = x.shape
+    d_inner, h, p_dim, n = mamba_dims(cfg)
+    z, xh, b_in, c_in, dt, _ = _projections(p, x, cfg, None)
+    xh = xh.reshape(bsz, s, h, p_dim)
+    state = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    y, _ = ssd_chunked(xh, dt, p["a_log"], b_in, c_in, state, chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+def mamba2_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
+                  cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, D); single-step SSM recurrence."""
+    bsz = x.shape[0]
+    d_inner, h, p_dim, n = mamba_dims(cfg)
+    z, xh, b_in, c_in, dt, new_conv = _projections(
+        p, x, cfg, state["conv"])
+    xh32 = xh.reshape(bsz, h, p_dim).astype(jnp.float32)
+    dt1 = dt[:, 0]                                            # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None] * dt1)  # (B,H)
+    b32 = b_in[:, 0].astype(jnp.float32)                      # (B,N)
+    c32 = c_in[:, 0].astype(jnp.float32)
+    upd = (dt1[..., None, None] * xh32[..., None]
+           * b32[:, None, None, :])                            # (B,H,P,N)
+    new_ssm = state["ssm"] * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c32)
+    y = y + xh32 * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, {"ssm": new_ssm, "conv": new_conv}

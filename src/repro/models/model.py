@@ -1,0 +1,322 @@
+"""Model facade: param specs, init, and the three entry points
+(train loss / prefill / decode) for every assigned architecture.
+
+All three entry points run the same pattern-block code; the stack is a
+``lax.scan`` over pattern blocks by default (keeps HLO size ~O(1) in depth)
+or unrolled for cost-extrapolation probes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_SHARED, DEC_ATTN, ENC_ATTN, ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.transformer import ImplConfig
+
+Params = Dict[str, Any]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class Model:
+    """Stateless model: pure functions over a params pytree."""
+
+    def __init__(self, cfg: ModelConfig, impl: Optional[ImplConfig] = None):
+        self.cfg = cfg
+        self.impl = impl or ImplConfig()
+
+    # -- parameters --------------------------------------------------------
+    def param_specs(self) -> Params:
+        specs = T.model_specs(self.cfg)
+        nb = self._num_blocks()
+        if nb != self.cfg.num_blocks:
+            specs["blocks"] = jax.tree.map(
+                lambda s: L.Spec((nb,) + s.shape[1:], s.axes, s.std),
+                specs["blocks"], is_leaf=L.is_spec)
+        return specs
+
+    def param_structs(self) -> Params:
+        return L.shape_structs(self.param_specs())
+
+    def logical_axes(self) -> Params:
+        return L.logical_axes(self.param_specs())
+
+    def init_params(self, rng: jax.Array) -> Params:
+        return L.init_from_specs(rng, self.param_specs())
+
+    def _num_blocks(self) -> int:
+        if self.impl.num_blocks_override is not None:
+            return self.impl.num_blocks_override
+        return self.cfg.num_blocks
+
+    # -- embedding / head --------------------------------------------------
+    def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        scale = math.sqrt(self.cfg.d_model) if self.cfg.name.startswith(
+            "gemma") else 1.0
+        x = L.embed(params["embed"], tokens, scale)
+        if self.cfg.rope_theta <= 0 and not self.cfg.is_encdec:
+            pass
+        return x
+
+    def _add_positional(self, x: jax.Array, offset: int = 0) -> jax.Array:
+        """Sinusoidal positions for non-RoPE models (whisper stub)."""
+        if self.cfg.rope_theta > 0:
+            return x
+        pos = L.sinusoidal_positions(x.shape[1] + offset,
+                                     self.cfg.d_model)[offset:]
+        return (x.astype(jnp.float32) + pos).astype(x.dtype)
+
+    # -- frontends (stubs per assignment) -----------------------------------
+    def _encoder(self, params: Params, enc_feats: jax.Array) -> jax.Array:
+        """Whisper encoder over precomputed frame embeddings (conv stub)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = self._add_positional(enc_feats)
+
+        def body(x, bp):
+            h = T.apply_norm(cfg, bp["ln1"], x)
+            q = jnp.einsum("bsd,dnh->bsnh", h, bp["attn"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", h, bp["attn"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", h, bp["attn"]["wv"])
+            o = attn.sdpa(q, k, v, causal=False, impl=self.impl.attn_impl,
+                          chunk=self.impl.attn_chunk)
+            x = x + attn.attn_out(bp["attn"], o)
+            h = T.apply_norm(cfg, bp["ln2"], x)
+            x = x + L.mlp(bp["mlp"], h)
+            return x, None
+
+        x, _ = jax.lax.scan(T._remat(body, self.impl.remat), x, enc["blocks"])
+        return T.apply_norm(cfg, enc["ln_f"], x)
+
+    def _vlm_prefix(self, params: Params, img_feats: jax.Array) -> jax.Array:
+        """Project stubbed CLIP patch embeddings into the LM stream."""
+        return jnp.einsum("bnc,cd->bnd", img_feats, params["img_proj"])
+
+    # -- stack runners -------------------------------------------------------
+    def _run_blocks_train(self, params: Params, x: jax.Array,
+                          enc_out: Optional[jax.Array]
+                          ) -> Tuple[jax.Array, jax.Array]:
+        cfg, impl = self.cfg, self.impl
+        shared = {k: params[k] for k in ("shared_attn",) if k in params}
+
+        def block_body(carry, bp):
+            x, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                x, a = T.apply_block_train(cfg, impl, kind,
+                                           bp[f"p{i}_{kind}"], x, shared,
+                                           enc_out)
+                aux = aux + a
+            return (x, aux), None
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if impl.unroll_blocks or not impl.scan_blocks:
+            carry = (x, aux0)
+            for i in range(self._num_blocks()):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                carry, _ = block_body(carry, bp)
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(
+                T._remat(block_body, impl.remat), (x, aux0), params["blocks"])
+        return x, aux
+
+    # -- entry point: training loss -----------------------------------------
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        mask = batch.get("mask")
+        x = self._embed(params, tokens)
+        n_img = 0
+        if cfg.family == "vlm" and "img_feats" in batch:
+            prefix = self._vlm_prefix(params, batch["img_feats"])
+            x = jnp.concatenate([prefix, x], axis=1)
+            n_img = prefix.shape[1]
+        x = self._add_positional(x)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encoder(params, batch["enc_feats"])
+        x, aux = self._run_blocks_train(params, x, enc_out)
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        if n_img:
+            x = x[:, n_img:]
+        ce = self._cross_entropy(params, x, labels, mask)
+        loss = ce + MOE_AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def _cross_entropy(self, params, x, labels, mask):
+        """CE over the vocab head.  With impl.loss_chunk > 0 the unembed +
+        softmax stream over sequence chunks under remat, so the fp32
+        logits (B, S, V) -- the single largest train-step temporary for
+        large-vocab archs -- never materialize at once (beyond-paper
+        optimization; see EXPERIMENTS.md §Perf)."""
+        cfg = self.cfg
+        c = self.impl.loss_chunk
+        if c <= 0 or x.shape[1] <= c or x.shape[1] % c != 0:
+            logits = L.unembed(params["embed"], x, cfg.logit_softcap)
+            return L.softmax_cross_entropy(logits, labels, mask)
+        b, s, d = x.shape
+        n = s // c
+        xc = x.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, n, c).transpose(1, 0, 2)
+        mc = (mask.reshape(b, n, c).transpose(1, 0, 2)
+              if mask is not None else jnp.ones((n, b, c), jnp.float32))
+
+        def body(carry, inp):
+            xi, li, mi = inp
+            logits = L.unembed(params["embed"], xi, cfg.logit_softcap)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(li, logits.shape[-1],
+                                    dtype=logits.dtype)
+            ll = jnp.einsum("...v,...v->...", logits, onehot)
+            nll = (lse - ll) * mi.astype(jnp.float32)
+            tot, cnt = carry
+            return (tot + nll.sum(), cnt + mi.astype(jnp.float32).sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.remat(body), (jnp.zeros((), jnp.float32),
+                              jnp.zeros((), jnp.float32)), (xc, lc, mc))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # -- entry point: prefill ------------------------------------------------
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                cache_len: int) -> Tuple[jax.Array, Params]:
+        """Full forward over the prompt; returns (last-token logits, cache)."""
+        cfg, impl = self.cfg, self.impl
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm" and "img_feats" in batch:
+            prefix = self._vlm_prefix(params, batch["img_feats"])
+            x = jnp.concatenate([prefix, x], axis=1)
+        x = self._add_positional(x)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encoder(params, batch["enc_feats"])
+        shared = {k: params[k] for k in ("shared_attn",) if k in params}
+
+        def block_body(x, bp):
+            caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, c = T.apply_block_prefill(cfg, impl, kind,
+                                             bp[f"p{i}_{kind}"], x, shared,
+                                             enc_out, cache_len)
+                caches[f"p{i}_{kind}"] = c
+            return x, caches
+
+        if impl.unroll_blocks or not impl.scan_blocks:
+            xs, stacked = x, []
+            for i in range(self._num_blocks()):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                xs, c = block_body(xs, bp)
+                stacked.append(c)
+            cache = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+            x = xs
+        else:
+            # cache lives in the scan CARRY and is written per-layer with
+            # dynamic_update_slice: in-place aliasing inside the while body
+            # (the xs/ys pattern double-buffers the whole stacked cache --
+            # 2x full-cache copies measured in XLA buffer assignment).
+            cache0 = self.init_cache(tokens.shape[0], cache_len)
+
+            def carry_body(carry, inp):
+                x, cache = carry
+                i, bp = inp
+                x, c = block_body(x, bp)
+                cache = jax.tree.map(
+                    lambda full, s: jax.lax.dynamic_update_index_in_dim(
+                        full, s.astype(full.dtype), i, 0), cache, c)
+                return (x, cache), None
+
+            nb = self._num_blocks()
+            (x, cache), _ = jax.lax.scan(
+                T._remat(carry_body, impl.remat), (x, cache0),
+                (jnp.arange(nb), params["blocks"]))
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(params["embed"], x[:, -1:], cfg.logit_softcap)
+        return logits, cache
+
+    # -- entry point: decode (one token) -------------------------------------
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Params,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+        cfg, impl = self.cfg, self.impl
+        x = self._embed(params, tokens)
+        x = self._add_positional_decode(x, pos)
+        shared = {k: params[k] for k in ("shared_attn",) if k in params}
+
+        def block_body(x, bp, bc):
+            new_c = {}
+            for i, kind in enumerate(cfg.pattern):
+                key = f"p{i}_{kind}"
+                x, c = T.apply_block_decode(cfg, impl, kind, bp[key], x,
+                                            bc[key], pos, shared)
+                new_c[key] = c
+            return x, new_c
+
+        if impl.unroll_blocks or not impl.scan_blocks:
+            stacked = []
+            for i in range(self._num_blocks()):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                bc = jax.tree.map(lambda a: a[i], cache)
+                x, c = block_body(x, bp, bc)
+                stacked.append(c)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+        else:
+            # cache in the scan carry (see prefill): the per-layer slice is
+            # read with dynamic_index and written back in place.
+            def carry_body(carry, inp):
+                x, cache = carry
+                i, bp = inp
+                bc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), cache)
+                x, c = block_body(x, bp, bc)
+                cache = jax.tree.map(
+                    lambda full, s: jax.lax.dynamic_update_index_in_dim(
+                        full, s.astype(full.dtype), i, 0), cache, c)
+                return (x, cache), None
+
+            nb = self._num_blocks()
+            (x, new_cache), _ = jax.lax.scan(
+                carry_body, (x, cache), (jnp.arange(nb), params["blocks"]))
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(params["embed"], x, cfg.logit_softcap)
+        return logits, new_cache
+
+    def _add_positional_decode(self, x: jax.Array, pos: jax.Array):
+        if self.cfg.rope_theta > 0:
+            return x
+        d = self.cfg.d_model
+        i = jnp.arange(0, d, 2, dtype=jnp.float32)
+        inv = jnp.power(10_000.0, -i / d)
+        ang = pos.astype(jnp.float32) * inv
+        pe = jnp.zeros((d,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+        return (x.astype(jnp.float32) + pe).astype(x.dtype)
+
+    # -- cache helpers -------------------------------------------------------
+    def cache_specs(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        nb = self._num_blocks()
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            leaf = T.block_cache_specs(cfg, kind, batch, cache_len)
+            out[f"p{i}_{kind}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((nb,) + s.shape, s.dtype), leaf)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(batch, cache_len))
+
+
+def build_model(cfg: ModelConfig, impl: Optional[ImplConfig] = None) -> Model:
+    return Model(cfg, impl)

@@ -1,0 +1,443 @@
+"""Model assembly: pattern blocks -> scanned stacks -> train/prefill/decode.
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.num_blocks`` times; the
+scan body applies one pattern block (so heterogeneous stacks like gemma3's
+5-local:1-global or zamba2's 5-mamba:1-shared-attn scan over *pattern
+blocks*, keeping the HLO small and making per-block cost extrapolation
+exact).
+
+Weight-shared components (zamba2's shared attention) live outside the
+scanned/stacked params, passed into the scan body by closure: one *data
+component* feeding many *compute components* in resource-graph terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_SHARED, DEC_ATTN,
+                                ENC_ATTN, MAMBA2, MOE, RWKV6, ModelConfig)
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rw
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplConfig:
+    """Execution-strategy knobs chosen by the materializer per invocation."""
+    attn_impl: str = "naive"          # naive | chunked | pallas
+    attn_chunk: int = 1024
+    scan_chunk: int = 128             # rwkv/ssd chunk
+    remat: str = "full"               # none | dots | full
+    scan_blocks: bool = True          # scan vs unroll over pattern blocks
+    num_blocks_override: Optional[int] = None  # cost-extrapolation probes
+    unroll_blocks: bool = False       # fully unroll (cost pass)
+    # (mesh, seq_axes, batch_axes) when the decode KV cache is seq-sharded
+    decode_shard_ctx: Optional[tuple] = None
+    # (mesh, model_axis, batch_axes) for expert-parallel MoE dispatch
+    ep_shard_ctx: Optional[tuple] = None
+    # stream the unembed+CE over sequence chunks (0 = monolithic logits)
+    loss_chunk: int = 0
+    # MoE dispatch: 'psum' (replicated-token combine) | 'a2a' (token-sharded
+    # all-to-all exchange over the model axis)
+    moe_dispatch: str = "psum"
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.remat(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.remat(fn)
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch (whisper uses LayerNorm+bias; the rest RMSNorm)
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.family == "audio":
+        return {"g": L.Spec((d,), ("embed",), std=1.0),
+                "b": L.Spec((d,), ("embed",), std=0.0)}
+    return {"g": L.rms_norm_spec(d)}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.family == "audio":
+        return L.layer_norm(x, p["g"], p["b"], eps=1e-5)
+    return L.rms_norm(x, p["g"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block param specs
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, kind: str) -> Params:
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return {"ln1": norm_specs(cfg), "attn": attn.attn_specs(cfg),
+                "ln2": norm_specs(cfg),
+                "mlp": L.gated_mlp_specs(cfg.d_model, cfg.d_ff)}
+    if kind == ENC_ATTN:
+        return {"ln1": norm_specs(cfg), "attn": attn.attn_specs(cfg),
+                "ln2": norm_specs(cfg),
+                "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff)}
+    if kind == DEC_ATTN:
+        return {"ln1": norm_specs(cfg),
+                "attn": attn.attn_specs(cfg, cross=True),
+                "ln_cross": norm_specs(cfg), "ln2": norm_specs(cfg),
+                "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff)}
+    if kind == MOE:
+        return {"ln1": norm_specs(cfg), "attn": attn.attn_specs(cfg),
+                "ln2": norm_specs(cfg), "moe": moe_mod.moe_specs(cfg)}
+    if kind == RWKV6:
+        return {"ln1": norm_specs(cfg), "ln2": norm_specs(cfg),
+                "rwkv": rw.rwkv6_specs(cfg)}
+    if kind == MAMBA2:
+        return {"ln1": norm_specs(cfg), "mamba": m2.mamba2_specs(cfg)}
+    if kind == ATTN_SHARED:
+        # per-application params only (input norm); weights are shared
+        return {"ln_in": norm_specs(cfg)}
+    raise ValueError(kind)
+
+
+def shared_specs(cfg: ModelConfig) -> Params:
+    """Model-level components shared across blocks / frontends."""
+    out: Params = {}
+    if ATTN_SHARED in cfg.pattern:
+        out["shared_attn"] = {
+            "ln1": norm_specs(cfg), "attn": attn.attn_specs(cfg),
+            "ln2": norm_specs(cfg),
+            "mlp": L.gated_mlp_specs(cfg.d_model, cfg.d_ff)}
+    if cfg.family == "vlm":
+        out["img_proj"] = L.Spec((1024, cfg.d_model), (None, "embed"))
+    if cfg.is_encdec:
+        out["encoder"] = {
+            "blocks": jax.tree.map(
+                lambda s: L.Spec((cfg.num_encoder_layers,) + s.shape,
+                                 ("blocks",) + s.axes, s.std),
+                block_specs(cfg, ENC_ATTN), is_leaf=L.is_spec),
+            "ln_f": norm_specs(cfg),
+        }
+    return out
+
+
+def model_specs(cfg: ModelConfig) -> Params:
+    """Full parameter spec tree."""
+    nb = cfg.num_blocks
+
+    def stack(s: L.Spec) -> L.Spec:
+        return L.Spec((nb,) + s.shape, ("blocks",) + s.axes, s.std)
+
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern):
+        blocks[f"p{i}_{kind}"] = jax.tree.map(
+            stack, block_specs(cfg, kind), is_leaf=L.is_spec)
+
+    out: Params = {
+        "embed": L.embed_specs(cfg.vocab_size, cfg.d_model,
+                               cfg.tie_embeddings),
+        "blocks": blocks,
+        "ln_f": norm_specs(cfg),
+    }
+    out.update(shared_specs(cfg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block application (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(cfg: ModelConfig, impl: ImplConfig, p: Params,
+                    x: jax.Array, *, window: int, gated: bool = True
+                    ) -> jax.Array:
+    h = apply_norm(cfg, p["ln1"], x)
+    x = x + attn.self_attention_train(
+        p["attn"], h, cfg, causal=True, window=window,
+        impl=impl.attn_impl, chunk=impl.attn_chunk)
+    h = apply_norm(cfg, p["ln2"], x)
+    if gated:
+        x = x + L.gated_mlp(p["mlp"], h)
+    else:
+        x = x + L.mlp(p["mlp"], h)
+    return x
+
+
+def apply_block_train(cfg: ModelConfig, impl: ImplConfig, kind: str,
+                      p: Params, x: jax.Array, shared: Params,
+                      enc_out: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        x = _attn_mlp_block(cfg, impl, p, x, window=window)
+    elif kind == DEC_ATTN:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + attn.self_attention_train(
+            p["attn"], h, cfg, causal=True, impl=impl.attn_impl,
+            chunk=impl.attn_chunk, prefix="self_")
+        h = apply_norm(cfg, p["ln_cross"], x)
+        enc_kv = attn.encode_cross_kv(p["attn"], enc_out)
+        x = x + attn.cross_attention(p["attn"], h, enc_kv, cfg)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h)
+    elif kind == MOE:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + attn.self_attention_train(
+            p["attn"], h, cfg, causal=True, impl=impl.attn_impl,
+            chunk=impl.attn_chunk)
+        h = apply_norm(cfg, p["ln2"], x)
+        y, aux = moe_mod.moe_block(p["moe"], h, cfg,
+                                   shard_ctx=impl.ep_shard_ctx,
+                                   dispatch=impl.moe_dispatch)
+        x = x + y
+    elif kind == RWKV6:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + rw.time_mix_train(p["rwkv"], h, cfg, chunk=impl.scan_chunk)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + rw.channel_mix(p["rwkv"], h)
+    elif kind == MAMBA2:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + m2.mamba2_train(p["mamba"], h, cfg, chunk=impl.scan_chunk)
+    elif kind == ATTN_SHARED:
+        sp = shared["shared_attn"]
+        h = apply_norm(cfg, p["ln_in"], x)
+        x = x + _shared_attn_apply(cfg, impl, sp, h)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _shared_attn_apply(cfg: ModelConfig, impl: ImplConfig, sp: Params,
+                       x: jax.Array) -> jax.Array:
+    h = apply_norm(cfg, sp["ln1"], x)
+    y = attn.self_attention_train(sp["attn"], h, cfg, causal=True,
+                                  impl=impl.attn_impl, chunk=impl.attn_chunk)
+    h2 = apply_norm(cfg, sp["ln2"], x + y)
+    return y + L.gated_mlp(sp["mlp"], h2)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs per kind
+# ---------------------------------------------------------------------------
+
+def block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int):
+    if kind in (ATTN_GLOBAL, MOE, ATTN_SHARED):
+        return attn.kv_cache_specs(cfg, batch, cache_len)
+    if kind == ATTN_LOCAL:
+        return attn.kv_cache_specs(cfg, batch, cache_len,
+                                   window=cfg.sliding_window)
+    if kind == DEC_ATTN:
+        specs = attn.kv_cache_specs(cfg, batch, cache_len)
+        kvs = (batch, cfg.num_kv_heads, cfg.encoder_seq_len, cfg.head_dim)
+        specs["cross_k"] = jax.ShapeDtypeStruct(kvs, jnp.bfloat16)
+        specs["cross_v"] = jax.ShapeDtypeStruct(kvs, jnp.bfloat16)
+        return specs
+    if kind == RWKV6:
+        return rw.rwkv_state_specs(cfg, batch)
+    if kind == MAMBA2:
+        return m2.mamba_state_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """Stacked (num_blocks leading dim) cache spec tree."""
+    nb = cfg.num_blocks
+    out = {}
+    for i, kind in enumerate(cfg.pattern):
+        leaf = block_cache_specs(cfg, kind, batch, cache_len)
+        out[f"p{i}_{kind}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((nb,) + s.shape, s.dtype), leaf)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# Decode-step block application
+# ---------------------------------------------------------------------------
+
+def apply_block_decode(cfg: ModelConfig, impl: ImplConfig, kind: str,
+                       p: Params, x: jax.Array, cache: Params,
+                       pos: jax.Array, shared: Params
+                       ) -> Tuple[jax.Array, Params]:
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        h = apply_norm(cfg, p["ln1"], x)
+        y, cache = attn.self_attention_decode(p["attn"], h, cache, pos, cfg,
+                                              window=window,
+                                              shard_ctx=impl.decode_shard_ctx)
+        x = x + y
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + L.gated_mlp(p["mlp"], h)
+    elif kind == DEC_ATTN:
+        h = apply_norm(cfg, p["ln1"], x)
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        y, self_cache = attn.self_attention_decode(
+            p["attn"], h, self_cache, pos, cfg, prefix="self_",
+            shard_ctx=impl.decode_shard_ctx)
+        x = x + y
+        h = apply_norm(cfg, p["ln_cross"], x)
+        q = jnp.einsum("bsd,dnh->bsnh", h, p["attn"]["cross_wq"])
+        t_enc = cache["cross_k"].shape[2]
+        o = attn.gqa_decode_sdpa(q, cache["cross_k"], cache["cross_v"],
+                                 jnp.ones((t_enc,), bool))
+        x = x + attn.attn_out(p["attn"], o, prefix="cross_")
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h)
+        cache = dict(self_cache, cross_k=cache["cross_k"],
+                     cross_v=cache["cross_v"])
+    elif kind == MOE:
+        h = apply_norm(cfg, p["ln1"], x)
+        y, cache = attn.self_attention_decode(p["attn"], h, cache, pos, cfg,
+                                              shard_ctx=impl.decode_shard_ctx)
+        x = x + y
+        h = apply_norm(cfg, p["ln2"], x)
+        y, _ = moe_mod.moe_block(p["moe"], h, cfg,
+                                 shard_ctx=impl.ep_shard_ctx,
+                                 dispatch=impl.moe_dispatch)
+        x = x + y
+    elif kind == RWKV6:
+        h = apply_norm(cfg, p["ln1"], x)
+        y, cache = _rwkv_decode(p["rwkv"], h, cache, cfg)
+        x = x + y
+        h = apply_norm(cfg, p["ln2"], x)
+        cm = rw.channel_mix(p["rwkv"], h, cache["shift_c"])
+        cache = dict(cache, shift_c=h)
+        x = x + cm
+    elif kind == MAMBA2:
+        h = apply_norm(cfg, p["ln1"], x)
+        y, cache = m2.mamba2_decode(p["mamba"], h, cache, cfg)
+        x = x + y
+    elif kind == ATTN_SHARED:
+        sp = shared["shared_attn"]
+        h = apply_norm(cfg, p["ln_in"], x)
+        hh = apply_norm(cfg, sp["ln1"], h)
+        y, cache = attn.self_attention_decode(sp["attn"], hh, cache, pos, cfg,
+                                              shard_ctx=impl.decode_shard_ctx)
+        h2 = apply_norm(cfg, sp["ln2"], h + y)
+        x = x + y + L.gated_mlp(sp["mlp"], h2)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def _rwkv_decode(p, x, cache, cfg):
+    tm_state = {"wkv": cache["wkv"], "shift_t": cache["shift_t"],
+                "shift_c": cache["shift_c"]}
+    y, tm_state = rw.time_mix_decode(p, x, tm_state, cfg)
+    return y, dict(cache, **tm_state)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-mode block application (full forward, returns populated cache)
+# ---------------------------------------------------------------------------
+
+def apply_block_prefill(cfg: ModelConfig, impl: ImplConfig, kind: str,
+                        p: Params, x: jax.Array, shared: Params,
+                        enc_out: Optional[jax.Array], cache_len: int
+                        ) -> Tuple[jax.Array, Params]:
+    s = x.shape[1]
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL, MOE):
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        h = apply_norm(cfg, p["ln1"], x)
+        y, kv = attn.self_attention_prefill(
+            p["attn"], h, cfg, window=window, impl=impl.attn_impl,
+            chunk=impl.attn_chunk)
+        kv = _pad_cache(kv, cache_len, window)
+        x = x + y
+        h = apply_norm(cfg, p["ln2"], x)
+        if kind == MOE:
+            y, _ = moe_mod.moe_block(p["moe"], h, cfg,
+                                     shard_ctx=impl.ep_shard_ctx,
+                                     dispatch=impl.moe_dispatch)
+            x = x + y
+        else:
+            x = x + L.gated_mlp(p["mlp"], h)
+        return x, kv
+    if kind == DEC_ATTN:
+        h = apply_norm(cfg, p["ln1"], x)
+        y, kv = attn.self_attention_prefill(
+            p["attn"], h, cfg, impl=impl.attn_impl, chunk=impl.attn_chunk,
+            prefix="self_")
+        kv = _pad_cache(kv, cache_len, 0)
+        x = x + y
+        h = apply_norm(cfg, p["ln_cross"], x)
+        enc_kv = attn.encode_cross_kv(p["attn"], enc_out)
+        x = x + attn.cross_attention(p["attn"], h, enc_kv, cfg)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h)
+        return x, dict(kv, cross_k=enc_kv["k"].transpose(0, 2, 1, 3),
+                       cross_v=enc_kv["v"].transpose(0, 2, 1, 3))
+    if kind == RWKV6:
+        h = apply_norm(cfg, p["ln1"], x)
+        hh = h
+        r, k, v, g, logw = rw.time_mix_projections(p["rwkv"], hh, None, cfg)
+        b = x.shape[0]
+        state0 = jnp.zeros((b, cfg.num_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32)
+        o, wkv = rw.wkv_chunked(r, k, v, logw, p["rwkv"]["bonus_u"], state0,
+                                impl.scan_chunk)
+        from repro.models.layers import group_norm_heads
+        o = group_norm_heads(o.astype(x.dtype), p["rwkv"]["ln_x"])
+        o = o * jax.nn.silu(g)
+        x = x + jnp.einsum("bsnh,nhd->bsd", o, p["rwkv"]["wo"])
+        h2 = apply_norm(cfg, p["ln2"], x)
+        x = x + rw.channel_mix(p["rwkv"], h2)
+        cache = {"wkv": wkv, "shift_t": hh[:, -1:], "shift_c": h2[:, -1:]}
+        return x, cache
+    if kind == MAMBA2:
+        h = apply_norm(cfg, p["ln1"], x)
+        bsz = x.shape[0]
+        d_inner, nh, p_dim, n = m2.mamba_dims(cfg)
+        z, xh, b_in, c_in, dt, conv_state = m2._projections(
+            p["mamba"], h, cfg, None)
+        xh_r = xh.reshape(bsz, s, nh, p_dim)
+        st0 = jnp.zeros((bsz, nh, p_dim, n), jnp.float32)
+        y, ssm = m2.ssd_chunked(xh_r, dt, p["mamba"]["a_log"], b_in, c_in,
+                                st0, impl.scan_chunk)
+        y = y + xh_r.astype(jnp.float32) * \
+            p["mamba"]["d_skip"].astype(jnp.float32)[:, None]
+        y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), p["mamba"]["norm"], cfg.norm_eps)
+        x = x + jnp.einsum("bsi,id->bsd", y, p["mamba"]["w_out"])
+        return x, {"ssm": ssm, "conv": conv_state}
+    if kind == ATTN_SHARED:
+        sp = shared["shared_attn"]
+        h = apply_norm(cfg, p["ln_in"], x)
+        hh = apply_norm(cfg, sp["ln1"], h)
+        y, kv = attn.self_attention_prefill(
+            sp["attn"], hh, cfg, impl=impl.attn_impl, chunk=impl.attn_chunk)
+        kv = _pad_cache(kv, cache_len, 0)
+        h2 = apply_norm(cfg, sp["ln2"], h + y)
+        x = x + y + L.gated_mlp(sp["mlp"], h2)
+        return x, kv
+    raise ValueError(kind)
+
+
+def _pad_cache(kv: Params, cache_len: int, window: int) -> Params:
+    """Right-pad prefill kv ((B, KV, S, hd) layout) to the cache length
+    (ring layout for SWA)."""
+    target = min(cache_len, window) if window > 0 else cache_len
+    def pad(a):
+        s = a.shape[2]
+        if s == target:
+            return a
+        if s > target:
+            return a[:, :, :target]
+        return jnp.pad(a, ((0, 0), (0, 0), (0, target - s), (0, 0)))
+    return jax.tree.map(pad, kv)

@@ -1,0 +1,123 @@
+"""Continuous-batching serving engine.
+
+The serving-side runtime of the framework: admits requests against the
+page pool (sizing policy from history), runs prefill for new requests and
+batched decode for running ones, grows KV grants on demand, and preempts
+the newest request when the pool is exhausted (re-queued: the paper's
+at-least-once component re-execution).
+
+The engine is deliberately execution-backend-agnostic: ``step_fns`` carry
+(prefill, decode) callables so tests can run a real tiny model while the
+scheduler benchmarks drive a null executor."""
+
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.history import HistoryStore
+from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
+
+
+@dataclass
+class EngineStats:
+    admitted: int = 0
+    completed: int = 0
+    preempted: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    tokens_generated: int = 0
+    wall_s: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses_asdict(self)
+
+
+def dataclasses_asdict(x):
+    import dataclasses
+    return dataclasses.asdict(x)
+
+
+class ServingEngine:
+    def __init__(self, pool: PagePool, max_batch: int = 8,
+                 step_fns: Optional[Tuple[Callable, Callable]] = None,
+                 history: Optional[HistoryStore] = None):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.queue: Deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self.stats = EngineStats()
+        self.step_fns = step_fns
+        self.history = history
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> List[Request]:
+        admitted = []
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue[0]
+            if not self.pool.try_admit(req):
+                break
+            self.queue.popleft()
+            self.running.append(req)
+            admitted.append(req)
+            self.stats.admitted += 1
+        return admitted
+
+    def _preempt_newest(self) -> None:
+        if not self.running:
+            return
+        victim = max(self.running, key=lambda r: -r.generated)
+        self.running.remove(victim)
+        self.pool.release(victim)
+        victim.state = "queued"
+        victim.generated = 0          # re-execute (at-least-once)
+        self.queue.appendleft(victim)
+        self.stats.preempted += 1
+
+    def step(self) -> bool:
+        """One engine iteration.  Returns False when fully drained."""
+        newly = self._admit()
+        if self.step_fns is not None:
+            prefill_fn, decode_fn = self.step_fns
+            for req in newly:
+                prefill_fn(req)
+                self.stats.prefills += 1
+        else:
+            self.stats.prefills += len(newly)
+
+        if not self.running:
+            return bool(self.queue)
+
+        # grow grants before decoding; preempt if the pool is exhausted
+        for req in list(self.running):
+            if not self.pool.grow(req):
+                self._preempt_newest()
+
+        if self.step_fns is not None:
+            _, decode_fn = self.step_fns
+            decode_fn(self.running)
+        for req in list(self.running):
+            req.generated += 1
+            self.stats.tokens_generated += 1
+            if req.generated >= req.max_new_tokens:
+                self.running.remove(req)
+                self.pool.release(req)
+                self.stats.completed += 1
+        self.stats.decode_steps += 1
+        return bool(self.queue or self.running)
+
+    def run_to_completion(self, max_steps: int = 1_000_000) -> EngineStats:
+        t0 = time.perf_counter()
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps >= max_steps:
+                break
+        self.stats.wall_s = time.perf_counter() - t0
+        return self.stats

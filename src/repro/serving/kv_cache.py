@@ -1,0 +1,136 @@
+"""Paged KV cache with history-driven pool sizing.
+
+The serving-side instantiation of the paper's data-component auto-scaling:
+a request's KV footprint is *input-dependent* (prompt + generation length),
+so per-request allocation follows the §9.3 policy -- an *initial* page grant
+plus *incremental* page grants on growth, both solved from the decayed
+history of observed request lengths (core/sizing.py).  Pages are the
+allocation quantum (the paper's fixed-increment memory regions).
+
+This Python-level pool manages logical pages; the device-side cache is a
+dense (pool_pages, page_size, KV, hd) array per layer indexed by page
+tables, attended to by the paged-attention kernel (kernels/paged_attention
+on TPU, ref path on CPU)."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.history import HistoryStore
+from repro.core.sizing import SizingSolution, solve_init_step
+
+PAGE_SIZE = 128  # tokens per page
+
+
+@dataclass
+class Request:
+    req_id: str
+    prompt_len: int
+    max_new_tokens: int
+    generated: int = 0
+    pages: List[int] = field(default_factory=list)
+    state: str = "queued"           # queued | running | done | preempted
+
+    @property
+    def length(self) -> int:
+        return self.prompt_len + self.generated
+
+    def pages_needed(self, horizon: int = 0) -> int:
+        return -(-(self.length + horizon) // PAGE_SIZE)
+
+
+class PagePool:
+    """Fixed pool of KV pages; per-request grants follow the sizing policy."""
+
+    def __init__(self, num_pages: int, history: Optional[HistoryStore] = None,
+                 app: str = "serve", policy: str = "history",
+                 fixed_init_pages: int = 2, fixed_step_pages: int = 1):
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages))
+        self.history = history
+        self.app = app
+        self.policy = policy
+        self.fixed = (fixed_init_pages, fixed_step_pages)
+        self._sizing: Optional[SizingSolution] = None
+        self._solve_counter = 0
+        self.stats = {"grants": 0, "grant_pages": 0, "denials": 0,
+                      "scaleups": 0, "released": 0}
+
+    # -- sizing policy ------------------------------------------------------
+    def sizing(self) -> SizingSolution:
+        if self.policy == "fixed":
+            return SizingSolution(self.fixed[0], self.fixed[1], 0, 0, 0, True)
+        if self._sizing is None or self._solve_counter >= 1000:
+            self._solve_counter = 0
+            hist = []
+            if self.history is not None:
+                h = self.history.get(self.app, "request", "pages")
+                if h is not None:
+                    hist = h.samples()
+            if self.policy == "peak":
+                peak = max((v for v, _ in hist), default=4.0)
+                self._sizing = SizingSolution(peak, 1, peak, 0, 0, True)
+            else:
+                self._sizing = solve_init_step(hist, quantum=1.0)
+        return self._sizing
+
+    # -- allocation ---------------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        """Initial grant: max(prompt pages, policy init)."""
+        sz = self.sizing()
+        want = max(req.pages_needed(), int(sz.init))
+        if want > len(self.free):
+            self.stats["denials"] += 1
+            return False
+        req.pages = [self.free.pop() for _ in range(want)]
+        req.state = "running"
+        self.stats["grants"] += 1
+        self.stats["grant_pages"] += want
+        self._solve_counter += 1
+        return True
+
+    def grow(self, req: Request) -> bool:
+        """Incremental grant when the request outgrows its pages."""
+        if req.pages_needed() <= len(req.pages):
+            return True
+        sz = self.sizing()
+        want = max(int(sz.step), req.pages_needed() - len(req.pages))
+        if want > len(self.free):
+            self.stats["denials"] += 1
+            return False
+        req.pages.extend(self.free.pop() for _ in range(want))
+        self.stats["scaleups"] += 1
+        return True
+
+    def release(self, req: Request) -> None:
+        self.free.extend(req.pages)
+        self.stats["released"] += 1
+        if self.history is not None:
+            self.history.observe(self.app, "request", "pages",
+                                 max(len(req.pages), 1))
+        req.pages = []
+        req.state = "done"
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / max(self.num_pages, 1)
+
+
+def page_table(requests: Sequence[Request], max_pages: int) -> np.ndarray:
+    """(B, max_pages) int32 page table (-1 padded) for the decode kernel."""
+    out = np.full((len(requests), max_pages), -1, np.int32)
+    for i, r in enumerate(requests):
+        n = min(len(r.pages), max_pages)
+        out[i, :n] = r.pages[:n]
+    return out
+
+
+def pool_pages_for_budget(hbm_bytes: int, num_layers: int, kv_dim: int,
+                          bytes_per: int = 2) -> int:
+    """How many pages fit a device-memory budget (both K and V)."""
+    per_page = 2 * PAGE_SIZE * kv_dim * bytes_per * num_layers
+    return max(int(hbm_bytes // per_page), 1)

@@ -1,0 +1,37 @@
+"""Serving steps: prefill and decode, shaped by the materialization plan."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.materializer import Plan
+from repro.models.model import Model
+from repro.models.transformer import ImplConfig
+
+
+def impl_from_plan(plan: Plan, unroll_blocks: bool = False,
+                   num_blocks_override: Optional[int] = None) -> ImplConfig:
+    return ImplConfig(attn_impl=plan.attn_impl, remat="none",
+                      scan_blocks=not unroll_blocks,
+                      unroll_blocks=unroll_blocks,
+                      num_blocks_override=num_blocks_override)
+
+
+def make_prefill_step(model: Model, cache_len: int) -> Callable:
+    def prefill(params, batch):
+        logits, cache = model.prefill(params, batch, cache_len)
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(model: Model, sample: bool = False,
+                     temperature: float = 1.0) -> Callable:
+    """decode(params, tokens (B,1), cache, pos) -> (next (B,1), logits, cache)."""
+    def decode(params, tokens, cache, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return decode

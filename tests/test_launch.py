@@ -1,0 +1,148 @@
+"""Unit tests for the dry-run/roofline machinery that doesn't need 512
+devices: HLO collective parsing, two-point extrapolation, input specs,
+mesh specs, and roofline aggregation."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: importing repro.launch.dryrun sets XLA_FLAGS *before* jax is
+# initialized elsewhere in this process -- but jax is already imported by
+# conftest, so the env var has no effect on device count here (it only
+# matters for fresh processes).  Safe to import for its pure helpers.
+from repro.launch import dryrun
+from repro.launch.input_specs import input_specs
+from repro.configs import SHAPES, get_config
+from repro.core.materializer import MESHES
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%add
+  %ars = f32[512]{0} all-reduce-start(%y), to_apply=%add
+  %ard = f32[512]{0} all-reduce-done(%ars)
+  %rs = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) reduce-scatter(%a, %b)
+  %a2a = s8[64,64]{1,0} all-to-all(%c)
+  %cp = bf16[32]{0} collective-permute(%d)
+  %dot = f32[128,128]{1,0} dot(%e, %f)
+}
+"""
+
+
+def test_collective_stats_parses_ops_and_bytes():
+    st = dryrun.collective_stats(HLO_SAMPLE)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 1024 * 2
+    # -start counted once, -done skipped
+    assert st["all-reduce"]["count"] == 2
+    assert st["all-reduce"]["bytes"] == 256 * 4 + 512 * 4
+    # tuple-typed reduce-scatter sums both operands
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["reduce-scatter"]["bytes"] == 2 * 8 * 128 * 2
+    assert st["all-to-all"]["bytes"] == 64 * 64
+    assert st["collective-permute"]["count"] == 1
+
+
+def test_merge_costs_extrapolation_and_clamp():
+    c1 = {"flops": 100.0, "bytes accessed": 50.0}
+    c2 = {"flops": 160.0, "bytes accessed": 45.0}  # decreasing -> clamp
+    out = dryrun._merge_costs(c1, c2, nb=10)
+    assert out["flops"] == 100.0 + 9 * 60.0
+    assert out["bytes accessed"] == 50.0  # clamped per-block delta
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mistral-nemo-12b", "train_4k"),
+    ("whisper-base", "train_4k"),
+    ("phi-3-vision-4.2b", "train_4k"),
+    ("rwkv6-7b", "decode_32k"),
+    ("gemma3-12b", "prefill_32k"),
+])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    ins = input_specs(cfg, sh)
+    assert all(isinstance(v, jax.ShapeDtypeStruct) for v in ins.values())
+    if sh.kind == "train":
+        b, s = ins["tokens"].shape
+        assert b == sh.global_batch
+        n_img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        assert s == sh.seq_len - n_img
+        assert ins["labels"].shape == ins["tokens"].shape
+        if cfg.is_encdec:
+            assert ins["enc_feats"].shape == (
+                b, cfg.encoder_seq_len, cfg.d_model)
+    elif sh.kind == "decode":
+        assert ins["tokens"].shape == (sh.global_batch, 1)
+        assert ins["pos"].shape == ()
+
+
+def test_mesh_specs_consistent():
+    sp, mp = MESHES["single_pod"], MESHES["multi_pod"]
+    assert sp.num_devices == 256 and mp.num_devices == 512
+    assert sp.axes == ("data", "model")
+    assert mp.axes == ("pod", "data", "model")
+    assert mp.axis_size("pod") == 2
+    assert sp.axis_size("nonexistent") == 1
+    assert sp.batch_capable_axes == ("data",)
+    assert mp.batch_capable_axes == ("pod", "data")
+
+
+def test_roofline_terms_math():
+    from repro.launch.dryrun import roofline_terms
+    cfg = get_config("tinyllama-1.1b")
+    shape = SHAPES["train_4k"]
+    mesh = MESHES["single_pod"]
+    result = {
+        "cost_extrapolated": {"flops": 197e12, "bytes accessed": 819e9},
+        "collectives_extrapolated": {
+            "all-reduce": {"count": 1, "bytes": 50e9}},
+    }
+    r = roofline_terms(result, cfg, shape, mesh)
+    assert abs(r["compute_term_s"] - 1.0) < 1e-6
+    assert abs(r["memory_term_s"] - 1.0) < 1e-6
+    assert abs(r["collective_term_s"] - 1.0) < 1e-6
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["model_flops"] > 0
+    assert 0 < r["mfu_upper_bound"] < 10
+
+
+def test_roofline_artifacts_loadable_and_consistent():
+    """Every produced dry-run artifact parses and carries coherent terms."""
+    from repro.roofline.analysis import load_cells, roofline_table
+    cells = load_cells()
+    if not cells:
+        pytest.skip("no dry-run artifacts present")
+    ok = [c for c in cells if c.get("status") == "ok"]
+    assert len(ok) >= 1
+    for c in ok:
+        r = c["roofline"]
+        assert r["compute_term_s"] >= 0
+        assert r["memory_term_s"] >= 0
+        assert r["collective_term_s"] >= 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert c["memory"]["peak_tpu_adjusted"] <= c["memory"]["peak_bytes"]
+        assert c["plan"]["notes"], "every plan must carry its audit trail"
+    rows = roofline_table(cells, "single_pod")
+    assert rows and all("advice" in r for r in rows)
+
+
+def test_all_runnable_cells_have_artifacts():
+    """The sweep must cover every runnable (arch x shape x mesh) cell."""
+    import os
+    from repro.configs import all_cells
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if not os.path.isdir(art) or not os.listdir(art):
+        pytest.skip("no dry-run artifacts present")
+    cells, skips = all_cells()
+    missing = []
+    for arch, shape, mesh in cells:
+        path = os.path.join(art, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(path):
+            missing.append((arch, shape, mesh))
+    assert not missing, f"missing dry-run artifacts: {missing[:5]}"
+    # documented skips: 7 pure-full-attention archs x long_500k
+    assert len(skips) == 7

@@ -1,0 +1,123 @@
+"""Serving stack: page pool sizing policies, continuous batching engine,
+preemption, and engine-with-real-model integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_config
+from repro.configs import get_config
+from repro.core.history import HistoryStore
+from repro.models import ImplConfig, build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import (PAGE_SIZE, PagePool, Request, page_table,
+                                    pool_pages_for_budget)
+
+
+def test_pool_admit_grow_release():
+    pool = PagePool(32, policy="fixed", fixed_init_pages=2, fixed_step_pages=1)
+    r = Request("r", prompt_len=PAGE_SIZE * 3, max_new_tokens=PAGE_SIZE)
+    assert pool.try_admit(r)
+    assert len(r.pages) == 3
+    r.generated = PAGE_SIZE  # outgrow
+    assert pool.grow(r)
+    assert len(r.pages) == 4
+    pool.release(r)
+    assert len(pool.free) == 32
+
+
+def test_pool_denial_when_exhausted():
+    pool = PagePool(4, policy="fixed", fixed_init_pages=4)
+    r1 = Request("a", PAGE_SIZE, 1)
+    r2 = Request("b", PAGE_SIZE, 1)
+    assert pool.try_admit(r1)
+    assert not pool.try_admit(r2)
+    assert pool.stats["denials"] == 1
+
+
+def test_history_policy_learns_init():
+    hist = HistoryStore()
+    for _ in range(50):
+        hist.observe("serve", "request", "pages", 6)
+    pool = PagePool(1024, history=hist, policy="history")
+    sz = pool.sizing()
+    # a 6-page request must be covered within one scale-up (the solver may
+    # legitimately prefer a small init + one large step: scaled allocations
+    # are discounted by cost_factor in the paper's objective)
+    import math
+    k = math.ceil(max(6 - sz.init, 0) / max(sz.step, 1e-9))
+    assert k <= 1, f"history of 6-page requests not covered cheaply: {sz}"
+
+
+def test_engine_completes_all_requests():
+    pool = PagePool(64, policy="fixed", fixed_init_pages=1)
+    eng = ServingEngine(pool, max_batch=4)
+    for i in range(10):
+        eng.submit(Request(f"r{i}", prompt_len=16, max_new_tokens=8))
+    stats = eng.run_to_completion()
+    assert stats.completed == 10
+    assert stats.tokens_generated == 80
+    assert len(pool.free) == 64
+
+
+def test_engine_preempts_on_pressure():
+    # pool too small for 4 growing requests -> must preempt + still finish
+    pool = PagePool(9, policy="fixed", fixed_init_pages=2, fixed_step_pages=1)
+    eng = ServingEngine(pool, max_batch=4)
+    for i in range(4):
+        eng.submit(Request(f"r{i}", prompt_len=PAGE_SIZE * 2 - 4,
+                           max_new_tokens=PAGE_SIZE))
+    stats = eng.run_to_completion(max_steps=10_000)
+    assert stats.completed == 4
+    assert stats.preempted >= 1
+
+
+def test_page_table_layout():
+    rs = [Request("a", 1, 1), Request("b", 1, 1)]
+    rs[0].pages = [3, 1]
+    rs[1].pages = [2]
+    pt = page_table(rs, 4)
+    assert pt.shape == (2, 4)
+    assert pt[0, 0] == 3 and pt[0, 1] == 1 and pt[1, 0] == 2
+    assert (pt[0, 2:] == -1).all()
+
+
+def test_pool_pages_for_budget():
+    n = pool_pages_for_budget(16 << 30, num_layers=32, kv_dim=1024)
+    assert n > 0
+    # budget doubles -> pages double
+    assert abs(pool_pages_for_budget(32 << 30, 32, 1024) - 2 * n) <= 1
+
+
+def test_engine_with_real_model(rng):
+    """Continuous batching driving a real tiny model decode loop."""
+    cfg = reduced_config(get_config("tinyllama-1.1b"))
+    model = build_model(cfg, ImplConfig(remat="none"))
+    params = model.init_params(rng)
+    cache_len = 64
+    max_batch = 2
+    cache = model.init_cache(max_batch, cache_len)
+    decode = jax.jit(model.decode_step)
+
+    state = {"pos": 0}
+
+    def prefill_fn(req):
+        pass  # tiny test: decode from scratch
+
+    def decode_fn(running):
+        toks = jnp.zeros((max_batch, 1), jnp.int32)
+        logits, new_cache = decode(params, toks, state["cache"],
+                                   jnp.asarray(state["pos"], jnp.int32))
+        state["cache"] = new_cache
+        state["pos"] += 1
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    state["cache"] = cache
+    pool = PagePool(32, policy="fixed", fixed_init_pages=1)
+    eng = ServingEngine(pool, max_batch=max_batch,
+                        step_fns=(prefill_fn, decode_fn))
+    for i in range(3):
+        eng.submit(Request(f"r{i}", prompt_len=4, max_new_tokens=5))
+    stats = eng.run_to_completion(max_steps=200)
+    assert stats.completed == 3

@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) for the §9.3 sizing program and other
+system invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sizing import (fixed_sizing, peak_sizing, simulate_policy,
+                               solve_init_step)
+from repro.core.history import DecayedHistogram
+
+usage_lists = st.lists(st.floats(min_value=1.0, max_value=1e6,
+                                 allow_nan=False, allow_infinity=False),
+                       min_size=1, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(usage_lists, st.floats(min_value=0.01, max_value=2.0))
+def test_sizing_covers_every_history_point(vals, cost_factor):
+    """Feasibility constraint: k_h * step + init >= h for all h."""
+    hist = [(v, 1.0) for v in vals]
+    sol = solve_init_step(hist, cost_factor=cost_factor)
+    for v in vals:
+        k = np.ceil(max(v - sol.init, 0.0) / max(sol.step, 1e-9))
+        assert k * sol.step + sol.init >= v - 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(usage_lists)
+def test_sizing_waste_bounded_when_feasible(vals):
+    hist = [(v, 1.0) for v in vals]
+    sol = solve_init_step(hist, waste_threshold=0.25)
+    if sol.feasible and len(set(vals)) > 1:
+        sim = simulate_policy(vals, sol)
+        # allocated never below used
+        assert sim["mean_alloc"] >= sim["mean_used"] - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(usage_lists)
+def test_history_sizing_respects_waste_constraint(vals):
+    """When feasible, the chosen point satisfies the waste constraint, and
+    it never costs more than the cheapest *grid-representable* peak
+    candidate (init grid is quantum-ceiled, so the raw peak itself may be
+    unreachable/infeasible)."""
+    hist = [(v, 1.0) for v in vals]
+    sol = solve_init_step(hist, cost_factor=0.3, waste_threshold=0.25)
+    if sol.feasible:
+        assert sol.waste_ratio < 0.25 + 1e-9
+        peak_q = float(np.ceil(max(max(vals), 1.0)))
+        vq = [max(v, 1.0) for v in vals]
+        peak_q_waste = float(np.mean([peak_q - v for v in vq])
+                             / max(np.mean(vq), 1e-9))
+        if peak_q_waste < 0.25:
+            assert sol.expected_cost <= peak_q + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(usage_lists)
+def test_peak_policy_never_scales_up(vals):
+    sol = peak_sizing([(v, 1.0) for v in vals])
+    sim = simulate_policy(vals, sol)
+    assert sim["mean_scaleups"] == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=1, max_value=1e5, allow_nan=False),
+                min_size=2, max_size=60))
+def test_histogram_quantile_monotone(vals):
+    h = DecayedHistogram()
+    for v in vals:
+        h.observe(v)
+    qs = [h.quantile(q) for q in (0.1, 0.5, 0.9, 1.0)]
+    assert all(a <= b + 1e-9 for a, b in zip(qs, qs[1:]))
+    # peak bucket must contain the max (log-bucket upper bound)
+    assert h.peak() >= max(vals) / 1.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=512), min_size=1,
+                max_size=30),
+       st.integers(min_value=1, max_value=8))
+def test_page_pool_conservation(lengths, step_pages):
+    """Pages are conserved: free + granted == total, always."""
+    from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
+    pool = PagePool(num_pages=256, policy="fixed", fixed_init_pages=2,
+                    fixed_step_pages=step_pages)
+    reqs = [Request(f"r{i}", l, 4) for i, l in enumerate(lengths)]
+    granted = []
+    for r in reqs:
+        if pool.try_admit(r):
+            granted.append(r)
+        used = sum(len(x.pages) for x in granted)
+        assert used + len(pool.free) == 256
+    for r in granted:
+        r.generated = r.max_new_tokens
+        pool.release(r)
+    assert len(pool.free) == 256
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=1, max_value=16))
+def test_capacity_dispatch_conservation(t, k):
+    """MoE router: combine weights are normalized; dropped tokens only
+    reduce (never corrupt) the output."""
+    import jax.numpy as jnp
+    import jax
+    from repro.configs import get_config
+    from conftest import reduced_config
+    from repro.models.moe import route
+    cfg = reduced_config(get_config("qwen2-moe-a2.7b"))
+    k = min(k, cfg.moe.num_experts)
+    import dataclasses as dc
+    cfg = cfg.scaled(moe=dc.replace(cfg.moe, top_k=k))
+    x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model),
+                          jnp.bfloat16)
+    import numpy as np
+    router = jax.random.normal(jax.random.PRNGKey(1),
+                               (cfg.d_model, 8), jnp.bfloat16)
+    w, ids, aux = route(router, x, cfg)
+    w = np.asarray(w, np.float32)
+    ids = np.asarray(ids)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=2e-2)
+    assert (ids < cfg.moe.num_experts).all(), "padded experts must not route"
+    assert np.isfinite(float(aux))
