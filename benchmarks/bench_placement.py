@@ -13,7 +13,6 @@ components go remote.  TPU analog on a decode cell's KV data component:
 Measured from fresh dry-run lowerings of whisper-base decode (small, fast
 compile).  Derived: collective bytes/device + roofline collective term."""
 
-import dataclasses
 import json
 import os
 import subprocess
@@ -28,16 +27,17 @@ def main() -> None:
     # run in a subprocess: needs the 512-device dry-run environment
     code = r"""
 import json
-from repro.configs.base import get_config, SHAPES
-from repro.core.materializer import MESHES, materialize
+from repro.configs.base import SHAPES
+from repro.core.materializer import MESHES
 from repro.launch.mesh import make_mesh_from_spec
 from repro.launch.dryrun import lower_cell, collective_stats, memory_footprint
-import dataclasses, jax
+from repro.runtime import Application, Cluster, NullExecutor
+import jax
 
-cfg = get_config("whisper-base")
 shape = SHAPES["decode_32k"]
 spec = MESHES["single_pod"]
 mesh = make_mesh_from_spec(spec)
+cluster = Cluster(pods=1, mesh=spec, executor=NullExecutor())
 variants = {
   "local_headshard":  {"kv_shard_heads": True,  "kv_shard_seq": False},
   "remote_seqshard":  {"kv_shard_heads": False, "kv_shard_seq": True},
@@ -45,8 +45,11 @@ variants = {
 }
 out = {}
 for name, ov in variants.items():
-    plan = materialize(cfg, shape, spec, overrides=ov)
-    l, _ = lower_cell(cfg, shape, plan, mesh)
+    # each variant is one submitted invocation class; the handle carries
+    # the materialized plan the dry-run lowers
+    h = cluster.submit(Application.serve("whisper-base", shape=shape),
+                       overrides=ov)
+    l, _ = lower_cell(h.app.config, shape, h.plan, mesh)
     c = l.compile()
     cs = collective_stats(c.as_text())
     mem = memory_footprint(c)
@@ -55,6 +58,7 @@ for name, ov in variants.items():
         "coll_counts": {k: d["count"] for k, d in cs.items() if d["count"]},
         "peak": mem["peak_tpu_adjusted"],
     }
+    h.release()
     jax.clear_caches()
 print("RESULT" + json.dumps(out))
 """

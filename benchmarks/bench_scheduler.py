@@ -1,16 +1,17 @@
 """Paper §6.2 scheduler scalability: 50k invocations/s global, 20k
-components/s per rack.  Replays arrival traces through the two-level
-scheduler (pure decision throughput, like the paper's measurement).
+components/s per rack.  Replays arrival traces through the runtime's REAL
+submission path (Cluster.submit / AppHandle.release with a NullExecutor),
+so the measured rate includes all per-application bookkeeping.
 
 Derived: scheduling ops/s vs the paper's claimed rates."""
 
 from benchmarks.common import row
-from repro.core.scheduler import measure_scheduler_throughput
+from repro.runtime import measure_cluster_throughput
 
 
 def main() -> None:
     for n_jobs, pods in ((20_000, 4), (50_000, 8), (100_000, 16)):
-        stats = measure_scheduler_throughput(n_jobs=n_jobs, num_pods=pods)
+        stats = measure_cluster_throughput(n_jobs=n_jobs, num_pods=pods)
         rate = stats["sched_ops_per_s"]
         row(f"sched_scalability/jobs{n_jobs}_pods{pods}",
             1e6 / max(rate, 1),

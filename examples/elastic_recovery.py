@@ -2,30 +2,22 @@
 resource-graph cut, re-materialize on a SMALLER device pool, continue.
 
 The resource-centric payoff (paper §2.3 vs migration): nothing about the
-application changes across the resize -- only the physical materialization.
+application changes across the resize -- ``handle.recover(new_mesh)``
+re-materializes the SAME application on the new pool and restores the
+latest persisted cut.
 
 Run:  PYTHONPATH=src python examples/elastic_recovery.py
 """
 
-import os
 import shutil
 import tempfile
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
-from repro.checkpoint.recovery import (CutTracker, ElasticPolicy,
-                                       FailureInjector, RecoveryPoint,
-                                       elastic_replan)
+from repro.checkpoint.recovery import ElasticPolicy, FailureInjector
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core.materializer import MULTI_POD, SINGLE_POD, MeshSpec
-from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import ImplConfig, build_model
-from repro.training import optimizer as opt
-from repro.training.train_step import make_train_step
+from repro.core.history import HistoryStore
+from repro.core.materializer import MULTI_POD, SINGLE_POD
+from repro.runtime import Application, Cluster, JaxExecutor
 
 
 def main():
@@ -33,52 +25,37 @@ def main():
     cfg = get_config("tinyllama-1.1b").scaled(
         num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
         d_ff=256, vocab_size=512)
-    shape = ShapeConfig("demo", "train", 64, 8)
+    app = Application.train(
+        cfg, shape=ShapeConfig("demo", "train", 64, 8), name="elastic-demo")
 
     policy = ElasticPolicy([MULTI_POD, SINGLE_POD])
-    plan = elastic_replan(cfg, shape, policy.current_mesh())
+    cluster = Cluster(pods=1, mesh=policy.current_mesh(),
+                      history=HistoryStore(),
+                      executor=JaxExecutor(ckpt_dir=ckpt_dir, ckpt_every=5))
+    handle = cluster.submit(app)
     print(f"initial mesh: {policy.current_mesh().name} "
           f"({policy.current_mesh().num_devices} chips), "
-          f"batch_axes={plan.batch_axes}")
+          f"batch_axes={handle.plan.batch_axes}")
 
-    model = build_model(cfg, ImplConfig(remat="none"))
-    params = model.init_params(jax.random.PRNGKey(0))
-    opt_state = opt.init_opt_state(params)
-    step = jax.jit(make_train_step(model, plan))
-    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 8))
-    cuts = CutTracker()
     inj = FailureInjector(fail_at_steps=(12,))
-
-    i = 0
-    while i < 20:
+    while handle.cursor < 20:
         try:
-            inj.maybe_fail(i)
-            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-            params, opt_state, m = step(params, opt_state, batch)
-            if (i + 1) % 5 == 0:
-                path = save_checkpoint(ckpt_dir, i + 1,
-                                       {"p": params, "o": opt_state},
-                                       extra={"cursor": i + 1})
-                cuts.record(RecoveryPoint(i + 1, path, i + 1,
-                                          policy.current_mesh().name))
-                print(f"step {i}: loss={float(m['loss']):.3f}  [cut recorded]")
-            i += 1
+            inj.maybe_fail(handle.cursor)
+            m = handle.step()
+            if handle.cursor % 5 == 0:
+                print(f"step {handle.cursor - 1}: loss={m['loss']:.3f}  "
+                      "[cut recorded]")
         except RuntimeError as e:
-            start, lost = cuts.replay_span(i)
-            print(f"\n!! {e} -- latest cut at step {start} "
-                  f"({lost} steps to replay)")
+            print(f"\n!! {e}")
             new_mesh = policy.shrink()
             print(f"elastic resize: -> {new_mesh.name} "
                   f"({new_mesh.num_devices} chips)")
-            plan = elastic_replan(cfg, shape, new_mesh)
-            print(f"re-materialized: batch_axes={plan.batch_axes} "
-                  f"tp={plan.tp} (same resource graph, new placement)")
-            restored, extra, _ = restore_checkpoint(
-                ckpt_dir, None, {"p": params, "o": opt_state})
-            params, opt_state = restored["p"], restored["o"]
-            step = jax.jit(make_train_step(model, plan))
-            i = extra["cursor"]
+            restart = handle.recover(new_mesh)
+            print(f"re-materialized: batch_axes={handle.plan.batch_axes} "
+                  f"tp={handle.plan.tp} (same application, new placement); "
+                  f"replaying from step {restart}")
 
+    handle.release()
     print(f"\ncompleted 20 steps despite the injected failure; "
           f"final mesh: {policy.current_mesh().name}")
     shutil.rmtree(ckpt_dir, ignore_errors=True)

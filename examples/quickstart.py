@@ -1,23 +1,18 @@
 """Quickstart: the resource-centric model in one page.
 
-Deploy an annotated "bulky application" (here: a tiny LM training job),
-let Zenix decompose it into a resource graph, materialize it adaptively
-for THIS invocation, and run a few steps.
+Describe an annotated "bulky application" (here: a tiny LM training job),
+submit it to a Cluster, and let the platform do its side of the contract:
+decompose it into a resource graph, size it, place it on a pod,
+materialize it adaptively for THIS invocation, and run a few steps.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
 from repro.core import annotations as ann
-from repro.core.graph import build_resource_graph
-from repro.core.materializer import SINGLE_POD, materialize
-from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import ImplConfig, build_model
-from repro.training import optimizer as opt
-from repro.training.train_step import make_train_step
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, JaxExecutor
 
 
 @ann.app_limit(max_chips=256)
@@ -30,11 +25,10 @@ def app():
 
 
 def main():
-    cfg = app()
-    shape = SHAPES["train_4k"]
-
-    # 1. offline: decompose into the paper's resource graph
-    graph = build_resource_graph(cfg, shape)
+    # 1. describe: the application -- not a function -- is the unit
+    application = Application.from_callable(
+        app, kind="train", shape=ShapeConfig("quickstart", "train", 32, 8))
+    graph = application.resource_graph()
     print(f"resource graph: {len(graph.compute)} compute components, "
           f"{len(graph.data)} data components")
     for name, comp in list(graph.compute.items())[:4]:
@@ -44,25 +38,27 @@ def main():
         print(f"  @data    {name:24s} bytes={d.bytes:.2e} "
               f"lifetime={d.lifetime}")
 
-    # 2. per-invocation: adaptive materialization (the paper's core)
-    plan = materialize(cfg, shape, SINGLE_POD)
-    print("\nmaterialization plan for this invocation:")
-    for note in plan.notes:
+    # 2. submit: the platform sizes, places, and materializes it
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor())
+    handle = cluster.submit(application)
+    print(f"\nplaced on {handle.pod} "
+          f"(demand {handle.job.demand_bytes / 2**20:.1f} MiB)")
+    print("materialization plan for this invocation:")
+    for note in handle.plan.notes:
         print("  ", note)
-    print(f"  -> tp={plan.tp} fsdp={plan.fsdp} zero={plan.zero} "
-          f"remat={plan.remat} microbatch={plan.microbatch}")
+    p = handle.plan
+    print(f"  -> tp={p.tp} fsdp={p.fsdp} zero={p.zero} "
+          f"remat={p.remat} microbatch={p.microbatch}")
 
-    # 3. execute a few steps (CPU-sized here; the same code runs on pods)
-    model = build_model(cfg, ImplConfig(remat="none"))
-    params = model.init_params(jax.random.PRNGKey(0))
-    opt_state = opt.init_opt_state(params)
-    step = jax.jit(make_train_step(model, plan))
-    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8))
+    # 3. execute a few steps (CPU-sized here; the same path runs on pods)
     for i in range(5):
-        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-        params, opt_state, m = step(params, opt_state, batch)
-        print(f"step {i}: loss={float(m['loss']):.4f} "
-              f"gnorm={float(m['grad_norm']):.3f}")
+        m = handle.step()
+        print(f"step {i}: loss={m['loss']:.4f}")
+
+    # 4. release: pod capacity returns exactly to its initial state
+    handle.release()
+    print(f"\nreleased; cluster capacity: {cluster.capacity()}")
 
 
 if __name__ == "__main__":

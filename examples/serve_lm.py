@@ -1,4 +1,6 @@
-"""Serving driver: continuous batching with history-sized paged KV grants.
+"""Serving driver on the runtime API: continuous batching with
+history-sized paged KV grants, behind the same Cluster.submit() path as
+training.
 
 Serves a small LM: prefill on admission, batched greedy decode, page-pool
 growth via the §9.3 sizing policy, preemption under pressure.
@@ -9,15 +11,13 @@ Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import ShapeConfig
 from repro.core.history import HistoryStore
-from repro.models import ImplConfig, build_model
-from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
+from repro.runtime import Application, Cluster, JaxExecutor
+from repro.serving.kv_cache import Request
 
 
 def main():
@@ -30,74 +30,36 @@ def main():
     cfg = get_config("tinyllama-1.1b").scaled(
         num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
         d_ff=256, vocab_size=512)
-    model = build_model(cfg, ImplConfig(remat="none"))
-    rng = jax.random.PRNGKey(0)
-    params = model.init_params(rng)
+    app = Application.serve(
+        cfg, shape=ShapeConfig("serve-demo", "decode", 64, args.max_batch),
+        name="serve-lm", max_batch=args.max_batch, pool_pages=128,
+        cache_len=256, policy="history")
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor())
+    handle = cluster.submit(app)
 
-    cache_len = 256
-    slots = {}           # slot -> (Request, pos)
-    cache = model.init_cache(args.max_batch, cache_len)
-    decode = jax.jit(model.decode_step)
-    prefill = jax.jit(lambda p, b, s: model.prefill(p, b, cache_len))
-
-    state = {"cache": cache, "generated": {}}
-
-    def prefill_fn(req):
-        # prefill this request alone, write its row into the batch cache
-        toks = jax.random.randint(jax.random.PRNGKey(hash(req.req_id) % 2**31),
-                                  (1, req.prompt_len), 0, cfg.vocab_size)
-        logits, rc = prefill(params, {"tokens": toks}, None)
-        slot = min(set(range(args.max_batch))
-                   - {s for s, _ in slots.values()})
-        slots[req.req_id] = (slot, req.prompt_len)
-        state["cache"] = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1),
-            state["cache"], rc)
-        state["generated"][req.req_id] = [int(jnp.argmax(logits[0, -1]))]
-
-    def decode_fn(running):
-        if not running:
-            return
-        toks = np.zeros((args.max_batch, 1), np.int32)
-        pos = 0
-        for req in running:
-            slot, plen = slots[req.req_id]
-            toks[slot, 0] = state["generated"][req.req_id][-1]
-            pos = max(pos, plen + req.generated)
-        logits, state["cache"] = decode(
-            params, jnp.asarray(toks), state["cache"],
-            jnp.asarray(pos, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
-        for req in running:
-            slot, _ = slots[req.req_id]
-            state["generated"][req.req_id].append(int(nxt[slot]))
-            if req.generated + 1 >= req.max_new_tokens:
-                slots.pop(req.req_id, None)
-
-    hist = HistoryStore()
-    pool = PagePool(128, history=hist, policy="history")
-    eng = ServingEngine(pool, max_batch=args.max_batch,
-                        step_fns=(prefill_fn, decode_fn), history=hist)
-
-    rng_np = np.random.default_rng(0)
+    rng = np.random.default_rng(0)
     for i in range(args.requests):
-        eng.submit(Request(f"req{i}", int(rng_np.integers(8, 64)),
-                           args.max_new))
+        handle.submit_request(Request(f"req{i}", int(rng.integers(8, 64)),
+                                      args.max_new))
     t0 = time.time()
-    stats = eng.run_to_completion(max_steps=10_000)
+    stats = handle.run(max_steps=10_000)
     wall = time.time() - t0
-    print(f"served {stats.completed}/{args.requests} requests, "
-          f"{stats.tokens_generated} tokens in {wall:.1f}s "
-          f"({stats.tokens_generated/max(wall,1e-9):.1f} tok/s)")
-    print(f"prefills={stats.prefills} decode_steps={stats.decode_steps} "
-          f"preempted={stats.preempted}")
+    pool = handle.engine.pool
+    print(f"served {stats['completed']}/{args.requests} requests, "
+          f"{stats['tokens_generated']} tokens in {wall:.1f}s "
+          f"({stats['tokens_generated']/max(wall, 1e-9):.1f} tok/s)")
+    print(f"prefills={stats['prefills']} "
+          f"decode_steps={stats['decode_steps']} "
+          f"preempted={stats['preempted']}")
     print(f"pool: grants={pool.stats['grants']} "
           f"scaleups={pool.stats['scaleups']} "
           f"denials={pool.stats['denials']}")
     sz = pool.sizing()
     print(f"learned sizing: init={sz.init:.0f} pages, step={sz.step:.0f}")
-    assert stats.completed == args.requests
+    completed = stats["completed"]
+    handle.release()
+    assert completed == args.requests
 
 
 if __name__ == "__main__":

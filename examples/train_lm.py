@@ -1,6 +1,7 @@
-"""End-to-end training driver: train an LM with the full substrate --
-adaptive materialization, data pipeline with prefetch, async checkpoints
-at graph cuts, straggler watchdog, crash recovery.
+"""End-to-end training driver on the runtime API: train an LM with the
+full substrate -- history sizing, placement, adaptive materialization,
+prefetching data pipeline, async checkpoints, straggler watchdog, crash
+recovery -- all behind one Cluster.submit().
 
 Presets:
   --preset ci    : ~3M params, 40 steps   (seconds; used by CI)
@@ -12,23 +13,15 @@ Run:  PYTHONPATH=src python examples/train_lm.py --preset ci
 """
 
 import argparse
-import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
-                                           restore_checkpoint)
-from repro.checkpoint.recovery import StragglerWatchdog
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core.materializer import SINGLE_POD, materialize
-from repro.data.pipeline import DataConfig, SyntheticLM, make_loader
-from repro.models import ImplConfig, build_model
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, JaxExecutor
 from repro.training import optimizer as opt
-from repro.training.train_step import make_train_step
 
 PRESETS = {
     "ci": dict(layers=2, d_model=128, heads=4, d_ff=512, vocab=512,
@@ -55,53 +48,37 @@ def main():
         head_dim=p["d_model"] // p["heads"], d_ff=p["d_ff"],
         vocab_size=p["vocab"])
     from repro.core.profiles import model_param_count
-    n_params = model_param_count(cfg)
-    print(f"model: {n_params/1e6:.1f}M params "
+    print(f"model: {model_param_count(cfg)/1e6:.1f}M params "
           f"({p['layers']}L d={p['d_model']})")
 
-    shape = ShapeConfig("example", "train", p["seq"], p["batch"])
-    plan = materialize(cfg, shape, SINGLE_POD)
-    print("plan:", plan.describe()["notes"][-1] if plan.notes else plan)
-
-    model = build_model(cfg, ImplConfig(remat="none"))
-    rng = jax.random.PRNGKey(0)
-    params = model.init_params(rng)
-    opt_state = opt.init_opt_state(params)
+    app = Application.train(
+        cfg, shape=ShapeConfig("example", "train", p["seq"], p["batch"]),
+        name=f"train-lm-{args.preset}", steps=p["steps"])
     ocfg = opt.OptimizerConfig(peak_lr=1e-3, warmup_steps=10,
                                decay_steps=p["steps"])
-    step = jax.jit(make_train_step(model, plan, ocfg))
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(ckpt_dir=args.ckpt_dir,
+                                           ckpt_every=args.ckpt_every,
+                                           resume=args.resume,
+                                           opt_cfg=ocfg))
+    handle = cluster.submit(app)
+    last_note = handle.plan.notes[-1] if handle.plan.notes else handle.plan
+    print("plan:", last_note)
+    if handle.cursor:
+        print(f"resumed from step {handle.cursor}")
 
-    start = 0
-    ck = AsyncCheckpointer(args.ckpt_dir, keep=2)
-    if args.resume and latest_step(args.ckpt_dir) is not None:
-        tree = {"params": params, "opt": opt_state}
-        restored, extra, s = restore_checkpoint(args.ckpt_dir, None, tree)
-        params, opt_state = restored["params"], restored["opt"]
-        start = extra["cursor"]
-        print(f"resumed from step {start}")
-
-    dcfg = DataConfig(cfg.vocab_size, p["seq"], p["batch"])
-    data = SyntheticLM(dcfg)
-    wd = StragglerWatchdog()
-    losses = []
     t_start = time.time()
-    for i in range(start, p["steps"]):
-        t0 = time.time()
-        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-        params, opt_state, m = step(params, opt_state, batch)
-        loss = float(m["loss"])
-        losses.append(loss)
-        wall = time.time() - t0
-        if wd.observe(i, wall):
-            print(f"  [watchdog] step {i} straggled ({wall:.2f}s)")
-        if (i + 1) % args.ckpt_every == 0:
-            ck.save(i + 1, {"params": params, "opt": opt_state},
-                    extra={"cursor": i + 1})
+    while handle.cursor < p["steps"]:
+        m = handle.step()
+        i = handle.cursor - 1
+        if m["straggled"]:
+            print(f"  [watchdog] step {i} straggled ({m['wall_s']:.2f}s)")
         if i % 10 == 0 or i == p["steps"] - 1:
-            print(f"step {i:4d} loss={loss:.4f} lr={float(m['lr']):.2e} "
-                  f"({wall:.2f}s/step)")
-    ck.wait()
+            print(f"step {i:4d} loss={m['loss']:.4f} "
+                  f"({m['wall_s']:.2f}s/step)")
     total = time.time() - t_start
+    losses = [m["loss"] for m in handle.metrics]
+    handle.release()
     first, last = np.mean(losses[:5]), np.mean(losses[-5:])
     print(f"\ndone: loss {first:.3f} -> {last:.3f} "
           f"({100*(1-last/first):.1f}% reduction) in {total:.1f}s")

@@ -1,0 +1,23 @@
+"""Version-compatibility shims for the range of jax releases we support.
+
+The repo targets the public ``jax.shard_map`` / ``jax.sharding.AxisType``
+surface of recent jax; older releases (<= 0.4.x, the pinned toolchain on
+this image) expose ``shard_map`` under ``jax.experimental`` with a
+``check_rep`` keyword instead of ``check_vma``.  All model code routes
+through this module so the difference lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:  # pragma: no cover - exercised on the pinned 0.4.x toolchain
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)

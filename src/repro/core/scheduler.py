@@ -5,9 +5,10 @@ racks; each rack-level scheduler places components on servers and keeps an
 exact view of per-server free resources.  TPU adaptation: the global
 scheduler balances *jobs* (training runs / serving replicas) across pods;
 each pod scheduler places a job's resource-graph components onto chips via
-the materializer and tracks HBM/chip occupancy.  The same objects drive the
-event-driven simulator used for the scheduler-scalability benchmark (the
-paper's 50k invocations/s global, 20k components/s rack claims).
+the materializer and tracks HBM/chip occupancy.  The same objects drive
+both real execution and the event-driven trace replay in
+``repro.runtime.simulate`` (the paper's 50k invocations/s global, 20k
+components/s rack claims).
 
 Placement policy (§5.1.1): locality-greedy best-fit -- choose the pod with
 the *smallest* sufficient free capacity, leaving larger pods free for
@@ -17,15 +18,12 @@ profile-estimated demand of a running application.
 
 from __future__ import annotations
 
-import heapq
-import itertools
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.graph import ResourceGraph
 from repro.core.history import HistoryStore
-from repro.core.materializer import MeshSpec, Plan, materialize
+from repro.core.materializer import Plan
 
 GB = 1 << 30
 
@@ -102,11 +100,22 @@ class PodScheduler:
 
     def scale_up(self, job_id: str, extra_bytes: int) -> bool:
         """Runtime component growth (paper §5.1.2 data-component scaling)."""
-        if extra_bytes > self.pod.available:
+        job = self.pod.running.get(job_id)
+        if job is None or extra_bytes > self.pod.available:
             return False
         self.pod.free_bytes -= extra_bytes
-        self.pod.running[job_id].demand_bytes += extra_bytes
+        job.demand_bytes += extra_bytes
         return True
+
+    def scale_down(self, job_id: str, release_bytes: int) -> int:
+        """Shrink a running job, returning bytes actually freed."""
+        job = self.pod.running.get(job_id)
+        if job is None:
+            return 0
+        freed = min(release_bytes, job.demand_bytes)
+        job.demand_bytes -= freed
+        self.pod.free_bytes += freed
+        return freed
 
     def release(self, job_id: str) -> None:
         job = self.pod.running.pop(job_id, None)
@@ -126,11 +135,23 @@ class GlobalScheduler:
         self.pending: List[Job] = []
         self.completed: List[Job] = []
         self.rejected: List[Job] = []
+        # per-job low-priority reservations (pre-marked future demand);
+        # released on finish so pods regain available_unreserved capacity
+        self.reservations: Dict[str, Tuple[str, int]] = {}
 
     def submit(self, job: Job) -> Optional[str]:
-        """Paper policy: smallest pod with sufficient free resources."""
-        cands = [(ps.pod.available, name) for name, ps in self.pods.items()
-                 if ps.pod.available >= job.demand_bytes]
+        """Paper policy: smallest pod with sufficient free resources.
+
+        Pre-marked reservations are low-priority (§5.1.1): admission first
+        looks for a pod whose UNRESERVED capacity fits the job, and only
+        when none exists takes space out of another job's reserve."""
+        cands = [(ps.pod.available_unreserved, name)
+                 for name, ps in self.pods.items()
+                 if ps.pod.available_unreserved >= job.demand_bytes]
+        if not cands:
+            cands = [(ps.pod.available, name)
+                     for name, ps in self.pods.items()
+                     if ps.pod.available >= job.demand_bytes]
         if not cands:
             self.pending.append(job)
             return None
@@ -143,86 +164,59 @@ class GlobalScheduler:
         if self.history is not None:
             est_peak = self.history.peak(job.app, "job", "bytes",
                                          job.demand_bytes)
-            self.pods[name].pod.reserved_bytes += max(
-                int(est_peak) - job.demand_bytes, 0)
+            mark = max(int(est_peak) - job.demand_bytes, 0)
+            if mark:
+                self.pods[name].pod.reserved_bytes += mark
+                self.reservations[job.job_id] = (name, mark)
         return name
+
+    def scale_up(self, job: Job, extra_bytes: int) -> bool:
+        """Grow a running job, consuming its pre-marked reservation first."""
+        if job.pod is None or not self.pods[job.pod].scale_up(
+                job.job_id, extra_bytes):
+            return False
+        res = self.reservations.get(job.job_id)
+        if res is not None:
+            name, mark = res
+            consumed = min(mark, extra_bytes)
+            self.pods[name].pod.reserved_bytes -= consumed
+            if mark - consumed > 0:
+                self.reservations[job.job_id] = (name, mark - consumed)
+            else:
+                del self.reservations[job.job_id]
+        return True
+
+    def scale_down(self, job: Job, release_bytes: int) -> int:
+        if job.pod is None:
+            return 0
+        return self.pods[job.pod].scale_down(job.job_id, release_bytes)
+
+    def cancel(self, job: Job) -> bool:
+        """Drop a still-pending job from the queue."""
+        if job in self.pending:
+            self.pending.remove(job)
+            job.state = "failed"
+            self.rejected.append(job)
+            return True
+        return False
+
+    def _release_reservation(self, job: Job) -> None:
+        res = self.reservations.pop(job.job_id, None)
+        if res is not None:
+            name, mark = res
+            self.pods[name].pod.reserved_bytes -= mark
 
     def finish(self, job: Job) -> None:
         if job.pod:
             self.pods[job.pod].release(job.job_id)
+        self._release_reservation(job)
         job.state = "done"
         self.completed.append(job)
         if self.history is not None:
             self.history.observe(job.app, "job", "bytes", job.demand_bytes)
-        # drain pending queue
-        still = []
-        for j in self.pending:
-            if self.submit(j) is None:
-                still.append(j)
-        self.pending = still
-
-
-# ---------------------------------------------------------------------------
-# Event-driven simulator (scheduler-scalability benchmark; paper claims
-# 50k invocations/s global, 20k components/s per rack)
-# ---------------------------------------------------------------------------
-
-@dataclass(order=True)
-class _Event:
-    t: float
-    seq: int
-    kind: str = field(compare=False)
-    job: Job = field(compare=False)
-
-
-class ClusterSimulator:
-    """Replays an arrival trace through the two-level scheduler."""
-
-    def __init__(self, num_pods: int = 4, chips_per_pod: int = 256,
-                 hbm_per_chip: int = 16 * GB,
-                 history: Optional[HistoryStore] = None):
-        pods = [PodState(f"pod{i}", chips_per_pod, hbm_per_chip)
-                for i in range(num_pods)]
-        self.sched = GlobalScheduler(pods, history)
-        self._seq = itertools.count()
-
-    def run(self, arrivals: List[Tuple[float, Job, float]]) -> Dict:
-        """arrivals: (t_arrive, job, duration).  Returns throughput stats."""
-        events: List[_Event] = []
-        for t, job, dur in arrivals:
-            heapq.heappush(events, _Event(t, next(self._seq), "arrive", job))
-            job._duration = dur  # type: ignore[attr-defined]
-        placed = finished = 0
-        wall0 = time.perf_counter()
-        while events:
-            ev = heapq.heappop(events)
-            if ev.kind == "arrive":
-                pod = self.sched.submit(ev.job)
-                if pod is not None:
-                    placed += 1
-                    heapq.heappush(events, _Event(
-                        ev.t + ev.job._duration,  # type: ignore
-                        next(self._seq), "finish", ev.job))
-            else:
-                self.sched.finish(ev.job)
-                finished += 1
-        wall = time.perf_counter() - wall0
-        return {
-            "placed": placed, "finished": finished,
-            "wall_s": wall,
-            "sched_ops_per_s": (placed + finished) / max(wall, 1e-9),
-        }
-
-
-def measure_scheduler_throughput(n_jobs: int = 50_000,
-                                 num_pods: int = 8) -> Dict:
-    """Micro-benchmark: pure scheduling decisions/second (no execution)."""
-    import random
-    rnd = random.Random(0)
-    arrivals = []
-    for i in range(n_jobs):
-        demand = rnd.choice([1, 2, 4, 8, 16]) * GB
-        job = Job(f"j{i}", f"app{i % 32}", "serve", demand, 1)
-        arrivals.append((i * 1e-6, job, 1e-3))
-    sim = ClusterSimulator(num_pods=num_pods)
-    return sim.run(arrivals)
+        # drain pending queue: iterate a snapshot -- submit() re-appends
+        # unplaceable jobs to self.pending, which must not be the list
+        # being iterated (it would loop forever on the first failure)
+        queued, self.pending = self.pending, []
+        for j in queued:
+            self.submit(j)

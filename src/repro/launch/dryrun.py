@@ -207,6 +207,15 @@ def lower_cell(cfg: ModelConfig, shape: ShapeConfig, plan: Plan, mesh,
             Model(cfg, impl)
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() across jax versions: older releases return
+    a one-element list of dicts, newer ones the dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def memory_footprint(compiled) -> Dict[str, int]:
     """Per-device footprint.  ``peak_tpu_adjusted`` halves the temp term:
     XLA:CPU has no native bf16, so it materializes fp32 shadow copies of
@@ -238,12 +247,19 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
              max_escalations: int = 6,
              cost_probes: bool = True,
              keep_hlo: bool = False) -> Dict[str, Any]:
-    cfg = get_config(arch)
+    # the cell is an Application invocation class: resolve config/shape and
+    # the proactive resource profile through the runtime's description
+    from repro.runtime import Application
+
     shape = SHAPES[shape_name]
+    app = (Application.train(arch, shape=shape) if shape.kind == "train"
+           else Application.serve(arch, shape=shape))
+    cfg = app.config
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": why}
+    graph = app.resource_graph()
     mesh_spec = MESHES[mesh_name]
     mesh = make_mesh_from_spec(mesh_spec)
     plan = materialize(cfg, shape, mesh_spec, history=history,
@@ -271,12 +287,15 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     assert compiled is not None
 
     mem = memory_footprint(compiled)
-    cost = dict(compiled.cost_analysis())
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     colls = collective_stats(hlo)
     result.update({
         "status": "ok",
         "plan": plan.describe(),
+        "resource_graph": {"compute": len(graph.compute),
+                           "data": len(graph.data),
+                           "estimated_demand_bytes": app.estimate_demand()},
         "memory": mem,
         "fits": mem["peak_tpu_adjusted"] <= budget,
         "hbm_budget": budget,
@@ -303,7 +322,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
                 l, _ = lower_cell(cfg, probe_shape, probe_plan, mesh,
                                   unroll=True, nb_override=nb, donate=False)
                 c = l.compile()
-                costs.append({k: float(v) for k, v in c.cost_analysis().items()
+                costs.append({k: float(v) for k, v in cost_dict(c).items()
                               if isinstance(v, (int, float))})
                 coll_list.append(collective_stats(c.as_text()))
                 del l, c

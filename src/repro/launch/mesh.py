@@ -11,21 +11,31 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax has Auto-only meshes
+    AxisType = None
 
 from repro.core.materializer import MESHES, MULTI_POD, SINGLE_POD, MeshSpec
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_from_spec(spec: MeshSpec) -> Mesh:
-    return jax.make_mesh(spec.shape, spec.axes,
-                         axis_types=(AxisType.Auto,) * len(spec.axes))
+    return _make_mesh(spec.shape, spec.axes)
 
 
 def mesh_spec(name: str) -> MeshSpec:
@@ -38,5 +48,4 @@ def make_local_mesh(axes: Tuple[str, ...] = ("data", "model"),
     n = len(jax.devices())
     if shape is None:
         shape = (n,) + (1,) * (len(axes) - 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -1,6 +1,10 @@
-"""Production serving driver: continuous batching + paged KV + history
-sizing, parameterized by (arch, mesh).  --reduced serves a smoke-scale
-model on CPU through the identical engine code path."""
+"""Production serving driver, on the resource-centric runtime API.
+
+Default mode sizes/places the serving application and drives the
+continuous-batching engine through the NullExecutor (pure admission /
+paging / sizing behaviour, no model).  ``--reduced`` binds the JaxExecutor
+instead: a smoke-scale model runs real prefill + batched decode through
+the IDENTICAL submission path."""
 
 from __future__ import annotations
 
@@ -8,12 +12,12 @@ import argparse
 
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
+from repro.core import profiles as prof
 from repro.core.history import HistoryStore
-from repro.core.materializer import MESHES, materialize
-from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import (PagePool, Request,
-                                    pool_pages_for_budget)
+from repro.core.materializer import MESHES
+from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.serving.kv_cache import Request, pool_pages_for_budget
 
 
 def main():
@@ -24,37 +28,60 @@ def main():
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--policy", default="history",
                     choices=["history", "fixed", "peak"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="real smoke-scale model via the JaxExecutor")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     mesh_spec = MESHES[args.mesh]
-    shape = SHAPES["decode_32k"]
     history = HistoryStore("artifacts/history")
-    plan = materialize(cfg, shape, mesh_spec, history=history)
-    print(f"[plan] kv_shard_heads={plan.kv_shard_heads} "
-          f"kv_shard_seq={plan.kv_shard_seq} batch_axes={plan.batch_axes}")
 
-    # KV budget: HBM left after weights on the serving slice
-    from repro.core import profiles as prof
-    kv_budget = int(mesh_spec.hbm_per_device * mesh_spec.num_devices * 0.6
-                    - prof.param_bytes(cfg))
-    pages = pool_pages_for_budget(max(kv_budget, 1 << 30), cfg.num_layers,
-                                  cfg.kv_dim)
-    pool = PagePool(pages, history=history, app=args.arch,
-                    policy=args.policy)
-    eng = ServingEngine(pool, max_batch=args.max_batch, history=history)
+    if args.reduced:
+        executor = JaxExecutor()
+        app = Application.serve(args.arch, reduced=True,
+                                max_batch=min(args.max_batch, 4),
+                                pool_pages=128, policy=args.policy)
+        prompt_rng = (8, 64)
+        max_new = 16
+    else:
+        # KV budget: HBM left after weights on the serving slice
+        kv_budget = int(mesh_spec.hbm_per_device * mesh_spec.num_devices * 0.6
+                        - prof.param_bytes(cfg))
+        pages = pool_pages_for_budget(max(kv_budget, 1 << 30),
+                                      cfg.num_layers, cfg.kv_dim)
+        executor = NullExecutor()
+        app = Application.serve(args.arch, shape="decode_32k",
+                                max_batch=args.max_batch, pool_pages=pages,
+                                policy=args.policy)
+        prompt_rng = (64, 4096)
+        max_new = 256
+
+    cluster = Cluster(pods=1, mesh=mesh_spec, history=history,
+                      executor=executor)
+    handle = cluster.submit(app)
+    print(f"[plan] kv_shard_heads={handle.plan.kv_shard_heads} "
+          f"kv_shard_seq={handle.plan.kv_shard_seq} "
+          f"batch_axes={handle.plan.batch_axes}")
+    print(f"[placed] pod={handle.pod} "
+          f"demand={handle.job.demand_bytes / 2**30:.2f} GiB")
+
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        eng.submit(Request(f"r{i}", int(rng.integers(64, 4096)),
-                           int(rng.integers(16, 256))))
-    stats = eng.run_to_completion(max_steps=1_000_000)
-    print(f"[done] completed={stats.completed} "
-          f"tokens={stats.tokens_generated} "
-          f"decode_steps={stats.decode_steps} preempted={stats.preempted}")
-    print(f"[pool] pages={pages} peak_util={pool.utilization:.2f} "
-          f"scaleups={pool.stats['scaleups']} denials={pool.stats['denials']}")
+        handle.submit_request(Request(f"r{i}",
+                                      int(rng.integers(*prompt_rng)),
+                                      int(rng.integers(16, max_new + 1))))
+    stats = handle.run(max_steps=1_000_000)
+    pool = handle.engine.pool
+    print(f"[done] completed={stats['completed']} "
+          f"tokens={stats['tokens_generated']} "
+          f"decode_steps={stats['decode_steps']} "
+          f"preempted={stats['preempted']}")
+    print(f"[pool] pages={pool.num_pages} peak_util={pool.utilization:.2f} "
+          f"scaleups={pool.stats['scaleups']} "
+          f"denials={pool.stats['denials']}")
     sz = pool.sizing()
     print(f"[sizing/{args.policy}] init={sz.init:.0f} step={sz.step:.0f}")
+    handle.release()
     history.save()
 
 

@@ -1,34 +1,23 @@
-"""Production training driver.
+"""Production training driver, on the resource-centric runtime API.
 
 On a real TPU pod:   python -m repro.launch.train --arch mistral-nemo-12b
 On this CPU host:    add --reduced to run a smoke-scale config with the
-                     SAME code path (materializer, checkpoints, watchdog).
+                     SAME code path (sizing, placement, materialization,
+                     checkpoints, watchdog).
 
-The driver owns the full lifecycle: materialize -> (pre)compile via the
-compile cache -> train with async checkpoints at graph cuts -> straggler
-watchdog -> crash recovery with elastic re-materialization."""
+The driver no longer hand-wires materialize -> CompileCache -> Checkpointer:
+it describes the application and submits it; the Cluster sizes it from
+history (§9.3), places it (two-level scheduler), materializes it (locality
+ladder), and the JaxExecutor runs the compiled step loop with async
+checkpoints and crash recovery."""
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
-                                           restore_checkpoint)
-from repro.checkpoint.recovery import StragglerWatchdog
-from repro.configs import SHAPES, get_config
-from repro.configs.base import ShapeConfig
-from repro.core.compile_cache import CompileCache, plan_layout_key
 from repro.core.history import HistoryStore
-from repro.core.materializer import MESHES, materialize
-from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import ImplConfig, build_model
-from repro.training import optimizer as opt
-from repro.training.train_step import make_train_step
+from repro.core.materializer import MESHES
+from repro.runtime import Application, Cluster, JaxExecutor
 
 
 def main():
@@ -44,56 +33,29 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    shape = SHAPES[args.shape]
-    mesh_spec = MESHES[args.mesh]
     history = HistoryStore("artifacts/history")
-    plan = materialize(cfg, shape, mesh_spec, history=history)
-    print(f"[plan] {plan.describe()}")
+    app = Application.train(args.arch, shape=args.shape,
+                            reduced=args.reduced, steps=args.steps)
+    cluster = Cluster(pods=1, mesh=MESHES[args.mesh], history=history,
+                      executor=JaxExecutor(ckpt_dir=args.ckpt_dir,
+                                           ckpt_every=args.ckpt_every,
+                                           resume=args.resume))
+    handle = cluster.submit(app)
+    print(f"[plan] {handle.plan.describe()}")
+    print(f"[placed] pod={handle.pod} "
+          f"demand={handle.job.demand_bytes / 2**30:.2f} GiB")
+    if handle.cursor:
+        print(f"[resume] from step {handle.cursor}")
 
-    if args.reduced:
-        from tests.conftest import reduced_config  # same reduction recipe
-        cfg = reduced_config(cfg)
-        shape = ShapeConfig("reduced", "train", 64, 8)
-
-    model = build_model(cfg, ImplConfig(
-        remat=plan.remat if not args.reduced else "none"))
-    rng = jax.random.PRNGKey(0)
-    params = model.init_params(rng)
-    opt_state = opt.init_opt_state(params)
-    step_plan = plan if not args.reduced else materialize(
-        cfg, shape, mesh_spec, overrides={"microbatch": 1, "remat": "none"})
-    cache = CompileCache()
-    key = plan_layout_key(args.arch, args.shape, args.mesh, step_plan)
-    step = cache.get_or_compile(
-        key, lambda: jax.jit(make_train_step(model, step_plan)))
-
-    start = 0
-    ck = AsyncCheckpointer(args.ckpt_dir, keep=3)
-    if args.resume and latest_step(args.ckpt_dir) is not None:
-        tree = {"params": params, "opt": opt_state}
-        restored, extra, s = restore_checkpoint(args.ckpt_dir, None, tree)
-        params, opt_state = restored["params"], restored["opt"]
-        start = extra["cursor"]
-        print(f"[resume] from step {start}")
-
-    data = SyntheticLM(DataConfig(cfg.vocab_size, shape.seq_len,
-                                  shape.global_batch))
-    wd = StragglerWatchdog()
-    for i in range(start, args.steps):
-        t0 = time.time()
-        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-        params, opt_state, m = step(params, opt_state, batch)
-        wall = time.time() - t0
-        history.observe(args.arch, "train", "step_wall_s", wall)
-        if wd.observe(i, wall):
-            print(f"[watchdog] step {i} straggled: {wall:.2f}s")
-        if (i + 1) % args.ckpt_every == 0:
-            ck.save(i + 1, {"params": params, "opt": opt_state},
-                    extra={"cursor": i + 1})
+    while handle.cursor < args.steps:
+        m = handle.step()
+        i = handle.cursor - 1
+        if m["straggled"]:
+            print(f"[watchdog] step {i} straggled: {m['wall_s']:.2f}s")
         if i % 10 == 0:
-            print(f"step {i}: loss={float(m['loss']):.4f} ({wall:.2f}s)")
-    ck.wait()
+            print(f"step {i}: loss={m['loss']:.4f} ({m['wall_s']:.2f}s)")
+    handle.checkpoint()
+    handle.release()
     history.save()
     print("[done]")
 

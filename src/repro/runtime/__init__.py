@@ -1,0 +1,25 @@
+"""repro.runtime -- the resource-centric public API.
+
+One surface for train, serve, and simulate::
+
+    from repro.runtime import Application, Cluster, JaxExecutor
+
+    cluster = Cluster(pods=1, history=history, executor=JaxExecutor())
+    handle = cluster.submit(Application.train("tinyllama-1.1b",
+                                              reduced=True))
+    handle.run(steps=20)
+    handle.release()
+
+See docs/runtime.md for the full lifecycle.
+"""
+
+from repro.runtime.application import REDUCED_SHAPES, Application
+from repro.runtime.cluster import AppHandle, Cluster
+from repro.runtime.executors import Executor, JaxExecutor, NullExecutor
+from repro.runtime.simulate import measure_cluster_throughput, replay_trace
+
+__all__ = [
+    "Application", "AppHandle", "Cluster",
+    "Executor", "JaxExecutor", "NullExecutor",
+    "REDUCED_SHAPES", "measure_cluster_throughput", "replay_trace",
+]

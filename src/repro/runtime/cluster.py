@@ -1,0 +1,247 @@
+"""Cluster + AppHandle: the single public submission path.
+
+The lifecycle (paper §4-§5, TPU-adapted)::
+
+    cluster = Cluster(pods=2, mesh=SINGLE_POD, history=..., executor=...)
+    handle  = cluster.submit(app)     # size -> place -> materialize -> bind
+    handle.run(steps)                 # execute (train loop / serving engine)
+    handle.scale_up(bytes)            # runtime data-component growth
+    handle.release()                  # free placement, restore capacity
+
+``submit`` performs the platform's side of the resource-centric contract:
+
+1. **sizing** -- proactive profile estimate, refined by the §9.3
+   ``solve_init_step`` program over the decayed history of this
+   application's past footprints (initial + incremental grant sizes);
+2. **placement** -- the two-level scheduler (``GlobalScheduler`` best-fit
+   across pods, ``PodScheduler`` component placement within one);
+3. **materialization** -- the locality ladder (``materialize``), with
+   compile-feedback escalation available via ``handle.escalate``;
+4. **execution** -- the bound :class:`~repro.runtime.executors.Executor`
+   (NullExecutor for simulation, JaxExecutor for real steps).
+
+Insufficient capacity queues the application (``handle.state ==
+"pending"``); releasing other applications drains the queue and the
+handle binds lazily on its first step.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.checkpoint.recovery import StragglerWatchdog, elastic_replan
+from repro.core.history import HistoryStore
+from repro.core.materializer import (MESHES, SINGLE_POD, MeshSpec, Plan,
+                                     escalate, materialize)
+from repro.core.scheduler import GlobalScheduler, Job, PodState
+from repro.core.sizing import SizingSolution, solve_init_step
+from repro.runtime.application import Application
+from repro.runtime.executors import Executor, NullExecutor
+from repro.serving.kv_cache import Request
+
+GB = 1 << 30
+SIZING_QUANTUM = 64 << 20          # 64 MiB allocation granularity
+
+
+class AppHandle:
+    """Live view of one submitted application; drives its lifecycle."""
+
+    def __init__(self, app: Application, job: Job, cluster: "Cluster",
+                 sizing: Optional[SizingSolution] = None):
+        self.app = app
+        self.job = job
+        self.cluster = cluster
+        self.sizing = sizing
+        self.plan: Optional[Plan] = None
+        self.exec_state: Dict = {}
+        self.bound = False
+        self.cursor = 0                 # train steps completed / data cursor
+        self.metrics: List[Dict] = []
+        self.watchdog = StragglerWatchdog()
+
+    # -- state --------------------------------------------------------------
+    @property
+    def state(self) -> str:
+        return self.job.state
+
+    @property
+    def pod(self) -> Optional[str]:
+        return self.job.pod
+
+    @property
+    def engine(self):
+        return self.exec_state.get("engine")
+
+    def _ensure_bound(self) -> None:
+        if self.job.state != "running":
+            raise RuntimeError(
+                f"{self.app.name}: not placed (state={self.job.state}); "
+                "release capacity or wait for the pending queue to drain")
+        if self.bound or self.app.config is None:
+            return
+        self.cluster.executor.bind(self)
+        self.bound = True
+
+    # -- execution ----------------------------------------------------------
+    def step(self) -> Dict:
+        """One unit of progress: a train step or one engine iteration."""
+        self._ensure_bound()
+        if self.app.kind == "train":
+            t0 = time.time()
+            m = self.cluster.executor.train_step(self)
+            wall = time.time() - t0
+            self.cursor += 1
+            m["wall_s"] = wall
+            m["straggled"] = self.watchdog.observe(self.cursor, wall)
+            if self.cluster.history is not None:
+                self.cluster.history.observe(self.app.config.name, "train",
+                                             "step_wall_s", wall)
+            self.cluster.executor.maybe_checkpoint(self)
+            self.metrics.append(m)
+            return m
+        alive = self.engine.step()
+        return {"alive": alive, "stats": self.engine.stats}
+
+    def run(self, steps: Optional[int] = None, *,
+            max_steps: int = 1_000_000) -> Dict:
+        """Run to completion: N train steps, or drain the serving queue."""
+        self._ensure_bound()
+        if self.app.kind == "train":
+            total = steps if steps is not None else int(
+                self.app.options.get("steps", 10))
+            while self.cursor < total:
+                self.step()
+            self.cluster.executor.checkpoint(self)
+            losses = [m["loss"] for m in self.metrics]
+            return {"steps": self.cursor,
+                    "loss_first": losses[0] if losses else None,
+                    "loss_last": losses[-1] if losses else None,
+                    "straggled": len(self.watchdog.flags)}
+        stats = self.engine.run_to_completion(max_steps=max_steps)
+        return stats.as_dict()
+
+    def submit_request(self, req: Request) -> None:
+        self._ensure_bound()
+        self.engine.submit(req)
+
+    # -- runtime scaling (paper §5.1.2) -------------------------------------
+    def scale_up(self, extra_bytes: int) -> bool:
+        """Grow this application's footprint (consumes its reservation)."""
+        return self.cluster.scheduler.scale_up(self.job, int(extra_bytes))
+
+    def scale_down(self, release_bytes: int) -> int:
+        return self.cluster.scheduler.scale_down(self.job, int(release_bytes))
+
+    # -- materialization feedback / recovery --------------------------------
+    def _rebind(self) -> None:
+        """Drop executable state (quiescing in-flight checkpoints), rebind
+        under the current plan, and restore the latest persisted cut."""
+        was_bound = self.bound
+        self.cluster.executor.release(self)
+        self.bound = False
+        if was_bound:
+            self._ensure_bound()
+            self.cursor = self.cluster.executor.restore(self)
+
+    def escalate(self, measured_bytes: int) -> bool:
+        """Compile-feedback escalation: move one rung up the ladder."""
+        nxt = escalate(self.plan, self.app.config, self.app.shape,
+                       measured_bytes)
+        if nxt is None:
+            return False
+        self.plan = nxt
+        self._rebind()
+        return True
+
+    def checkpoint(self, block: bool = True) -> None:
+        self.cluster.executor.checkpoint(self, block=block)
+
+    def recover(self, mesh: Optional[MeshSpec] = None) -> int:
+        """Re-materialize (possibly on a different mesh) and restore the
+        latest persisted cut.  Returns the restart cursor."""
+        mesh = mesh or self.cluster.mesh
+        self.plan = elastic_replan(self.app.config, self.app.shape, mesh,
+                                   history=self.cluster.history)
+        self.bound = True      # recover may be called on a fresh handle too
+        self._rebind()
+        return self.cursor
+
+    def release(self) -> None:
+        self.cluster.release(self)
+
+
+class Cluster:
+    """Resource-centric entry point: owns pods, scheduler, and executor."""
+
+    def __init__(self, pods: Union[int, List[PodState]] = 2, *,
+                 mesh: Union[str, MeshSpec] = SINGLE_POD,
+                 history: Optional[HistoryStore] = None,
+                 executor: Optional[Executor] = None):
+        self.mesh = MESHES[mesh] if isinstance(mesh, str) else mesh
+        if isinstance(pods, int):
+            pods = [PodState(f"pod{i}", self.mesh.num_devices,
+                             self.mesh.hbm_per_device) for i in range(pods)]
+        self.scheduler = GlobalScheduler(pods, history)
+        self.history = history
+        self.executor = executor or NullExecutor()
+        self.handles: Dict[str, AppHandle] = {}
+        self._job_ids = itertools.count()
+
+    # -- sizing (paper §9.3) -------------------------------------------------
+    def size(self, app: Application) -> Tuple[int, Optional[SizingSolution]]:
+        """Initial footprint: history-solved init when available, else the
+        proactive profile estimate; always capped by @app_limit."""
+        demand = app.estimate_demand()
+        sol = None
+        if self.history is not None:
+            h = self.history.get(app.name, "job", "bytes")
+            if h is not None and h.count:
+                sol = solve_init_step(h.samples(),
+                                      quantum=float(SIZING_QUANTUM))
+                if sol.feasible and sol.init > 0:
+                    demand = max(int(sol.init), app.structural_floor())
+        return app.capped_demand(demand), sol
+
+    # -- lifecycle ----------------------------------------------------------
+    def submit(self, app: Application, *,
+               overrides: Optional[Dict] = None) -> AppHandle:
+        demand, sizing = self.size(app)
+        job = Job(f"job{next(self._job_ids)}", app.name, app.kind,
+                  demand, app.demand_chips)
+        handle = AppHandle(app, job, self, sizing=sizing)
+        self.scheduler.submit(job)
+        if app.config is not None:
+            handle.plan = materialize(app.config, app.shape, self.mesh,
+                                      history=self.history,
+                                      overrides=overrides)
+            if job.state == "running":
+                handle._ensure_bound()
+        self.handles[job.job_id] = handle
+        return handle
+
+    def release(self, handle: AppHandle) -> None:
+        if handle.job.state == "pending":
+            self.scheduler.cancel(handle.job)
+        elif handle.job.state == "running":
+            self.executor.release(handle)
+            self.scheduler.finish(handle.job)
+        handle.bound = False
+        self.handles.pop(handle.job.job_id, None)
+
+    # -- introspection -------------------------------------------------------
+    def capacity(self) -> Dict[str, Dict[str, int]]:
+        """Exact per-pod accounting snapshot (free / reserved / running)."""
+        return {name: {"free_bytes": ps.pod.free_bytes,
+                       "reserved_bytes": ps.pod.reserved_bytes,
+                       "running": len(ps.pod.running)}
+                for name, ps in self.scheduler.pods.items()}
+
+    @property
+    def running(self) -> List[AppHandle]:
+        return [h for h in self.handles.values() if h.state == "running"]
+
+    @property
+    def pending(self) -> List[AppHandle]:
+        return [h for h in self.handles.values() if h.state == "pending"]

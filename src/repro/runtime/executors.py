@@ -1,0 +1,248 @@
+"""Execution backends for the runtime: the simulator and real jax share
+ONE submission path and differ only in the executor bound at submit time.
+
+* :class:`NullExecutor` -- no jax, no device state.  Training steps are
+  no-ops and serving engines run without step functions: exactly what the
+  scheduler-scalability and placement benchmarks need (pure decision
+  throughput, like the paper's §6.2 measurement).
+* :class:`JaxExecutor` -- builds the model, compiles the step through the
+  CompileCache, feeds synthetic data, writes async checkpoints, and runs
+  real prefill/decode through the ServingEngine.
+
+Executors keep all per-application state on ``handle.exec_state`` so one
+executor instance can drive many applications on one cluster.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, TYPE_CHECKING
+
+from repro.core.compile_cache import CompileCache, plan_layout_key
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PagePool
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.runtime.cluster import AppHandle
+
+
+class Executor:
+    """Interface the AppHandle lifecycle drives."""
+
+    name = "null"
+
+    def bind(self, handle: "AppHandle") -> None:
+        """Materialize executable state for a placed application."""
+        if handle.app.kind == "serve":
+            handle.exec_state["engine"] = self.build_engine(handle)
+
+    def train_step(self, handle: "AppHandle") -> Dict[str, float]:
+        return {"loss": 0.0}
+
+    def build_engine(self, handle: "AppHandle") -> ServingEngine:
+        opts = handle.app.options
+        pool = PagePool(int(opts.get("pool_pages", 256)),
+                        history=handle.cluster.history,
+                        app=handle.app.name,
+                        policy=opts.get("policy", "history"))
+        return ServingEngine(pool, max_batch=int(opts.get("max_batch", 8)),
+                             history=handle.cluster.history)
+
+    def maybe_checkpoint(self, handle: "AppHandle") -> None:
+        pass
+
+    def checkpoint(self, handle: "AppHandle", block: bool = True) -> None:
+        pass
+
+    def restore(self, handle: "AppHandle") -> int:
+        """Restore the latest persisted cut; returns the restart cursor."""
+        return 0
+
+    def release(self, handle: "AppHandle") -> None:
+        handle.exec_state.clear()
+
+
+class NullExecutor(Executor):
+    """Placement/accounting only -- drives the event-driven simulator."""
+
+
+class JaxExecutor(Executor):
+    """Real execution: jit-compiled training steps / model-backed serving."""
+
+    name = "jax"
+
+    def __init__(self, *, ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 resume: bool = False, seed: int = 0,
+                 opt_cfg: Optional[Any] = None,
+                 compile_cache: Optional[CompileCache] = None):
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.resume = resume
+        self.seed = seed
+        self.opt_cfg = opt_cfg
+        self.cache = compile_cache or CompileCache()
+
+    def _ckpt_dir(self, handle: "AppHandle") -> Optional[str]:
+        """Per-application checkpoint namespace: one executor drives many
+        applications, which must not overwrite each other's cuts."""
+        if not self.ckpt_dir:
+            return None
+        import os
+        return os.path.join(self.ckpt_dir, handle.app.name.replace("/", "_"))
+
+    # -- binding ------------------------------------------------------------
+    def bind(self, handle: "AppHandle") -> None:
+        if handle.app.kind == "train":
+            self._bind_train(handle)
+        else:
+            handle.exec_state["engine"] = self.build_engine(handle)
+
+    def _bind_train(self, handle: "AppHandle") -> None:
+        import jax
+
+        from repro.checkpoint.checkpointer import AsyncCheckpointer
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        from repro.models import ImplConfig, build_model
+        from repro.training import optimizer as opt
+        from repro.training.train_step import make_train_step
+
+        app, plan = handle.app, handle.plan
+        cfg, shape = app.config, app.shape
+        # reduced CPU runs keep remat off: the ladder's remat choice targets
+        # pod HBM budgets, not the smoke-scale footprint
+        impl = ImplConfig(remat="none" if app.reduced else plan.remat)
+        model = build_model(cfg, impl)
+        rng = jax.random.PRNGKey(self.seed)
+        params = model.init_params(rng)
+        opt_state = opt.init_opt_state(params)
+        key = plan_layout_key(cfg.name, shape.name, plan.mesh.name, plan)
+        step = self.cache.get_or_compile(
+            key, lambda: jax.jit(make_train_step(model, plan, self.opt_cfg)))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, shape.seq_len,
+                                      shape.global_batch))
+        ckpt_dir = self._ckpt_dir(handle)
+        ck = AsyncCheckpointer(ckpt_dir, keep=3) if ckpt_dir else None
+        handle.exec_state.update(model=model, params=params,
+                                 opt_state=opt_state, step=step, data=data,
+                                 checkpointer=ck)
+        if self.resume:
+            handle.cursor = max(handle.cursor, self.restore(handle))
+
+    # -- training -----------------------------------------------------------
+    def train_step(self, handle: "AppHandle") -> Dict[str, float]:
+        import jax.numpy as jnp
+
+        st = handle.exec_state
+        batch = {k: jnp.asarray(v)
+                 for k, v in st["data"].batch_at(handle.cursor).items()}
+        st["params"], st["opt_state"], m = st["step"](
+            st["params"], st["opt_state"], batch)
+        return {"loss": float(m["loss"])}
+
+    def maybe_checkpoint(self, handle: "AppHandle") -> None:
+        if (self.ckpt_every and handle.exec_state.get("checkpointer")
+                and handle.cursor % self.ckpt_every == 0):
+            self.checkpoint(handle, block=False)
+
+    def checkpoint(self, handle: "AppHandle", block: bool = True) -> None:
+        ck = handle.exec_state.get("checkpointer")
+        if ck is None:
+            return
+        st = handle.exec_state
+        ck.save(handle.cursor, {"params": st["params"], "opt": st["opt_state"]},
+                extra={"cursor": handle.cursor}, block=block)
+
+    def restore(self, handle: "AppHandle") -> int:
+        from repro.checkpoint.checkpointer import (latest_step,
+                                                   restore_checkpoint)
+        ckpt_dir = self._ckpt_dir(handle)
+        if not ckpt_dir or latest_step(ckpt_dir) is None:
+            return 0
+        st = handle.exec_state
+        tree = {"params": st["params"], "opt": st["opt_state"]}
+        restored, extra, _ = restore_checkpoint(ckpt_dir, None, tree)
+        st["params"], st["opt_state"] = restored["params"], restored["opt"]
+        return int(extra.get("cursor", 0))
+
+    # -- serving ------------------------------------------------------------
+    def build_engine(self, handle: "AppHandle") -> ServingEngine:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.models import ImplConfig, build_model
+
+        app = handle.app
+        opts = app.options
+        cfg = app.config
+        max_batch = int(opts.get("max_batch", 4))
+        cache_len = int(opts.get("cache_len", 256))
+
+        model = build_model(cfg, ImplConfig(remat="none"))
+        params = model.init_params(jax.random.PRNGKey(self.seed))
+        decode = jax.jit(model.decode_step)
+        prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
+
+        state = {"cache": model.init_cache(max_batch, cache_len),
+                 "generated": {}}
+        slots: Dict[str, Any] = {}
+
+        engine_ref: Dict[str, ServingEngine] = {}
+
+        def prefill_fn(req):
+            toks = jax.random.randint(
+                jax.random.PRNGKey(hash(req.req_id) % 2**31),
+                (1, req.prompt_len), 0, cfg.vocab_size)
+            logits, rc = prefill(params, {"tokens": toks})
+            # evict slots of preempted requests (the engine re-queues them;
+            # only completion frees a slot in decode_fn) before picking one
+            running_ids = {r.req_id for r in engine_ref["engine"].running}
+            for rid in list(slots):
+                if rid not in running_ids:
+                    del slots[rid]
+            if req.req_id in slots:      # re-admission after preemption
+                slot = slots[req.req_id][0]
+            else:
+                slot = min(set(range(max_batch))
+                           - {s for s, _ in slots.values()})
+            slots[req.req_id] = (slot, req.prompt_len)
+            state["cache"] = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                state["cache"], rc)
+            state["generated"][req.req_id] = [int(jnp.argmax(logits[0, -1]))]
+
+        def decode_fn(running):
+            if not running:
+                return
+            toks = np.zeros((max_batch, 1), np.int32)
+            pos = 0
+            for req in running:
+                slot, plen = slots[req.req_id]
+                toks[slot, 0] = state["generated"][req.req_id][-1]
+                pos = max(pos, plen + req.generated)
+            logits, state["cache"] = decode(
+                params, jnp.asarray(toks), state["cache"],
+                jnp.asarray(pos, jnp.int32))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            for req in running:
+                slot, _ = slots[req.req_id]
+                state["generated"][req.req_id].append(int(nxt[slot]))
+                if req.generated + 1 >= req.max_new_tokens:
+                    slots.pop(req.req_id, None)
+
+        pool = PagePool(int(opts.get("pool_pages", 128)),
+                        history=handle.cluster.history, app=app.name,
+                        policy=opts.get("policy", "history"))
+        handle.exec_state.update(model=model, params=params,
+                                 serve_state=state)
+        engine = ServingEngine(pool, max_batch=max_batch,
+                               step_fns=(prefill_fn, decode_fn),
+                               history=handle.cluster.history)
+        engine_ref["engine"] = engine
+        return engine
+
+    def release(self, handle: "AppHandle") -> None:
+        ck = handle.exec_state.get("checkpointer")
+        if ck is not None:
+            ck.wait()
+        handle.exec_state.clear()

@@ -13,6 +13,7 @@ scheduler benchmarks drive a null executor."""
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -34,12 +35,7 @@ class EngineStats:
     wall_s: float = 0.0
 
     def as_dict(self) -> Dict:
-        return dataclasses_asdict(self)
-
-
-def dataclasses_asdict(x):
-    import dataclasses
-    return dataclasses.asdict(x)
+        return dataclasses.asdict(self)
 
 
 class ServingEngine:

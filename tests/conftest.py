@@ -2,7 +2,6 @@
 smoke tests and benches must see the real single CPU device; only
 launch/dryrun.py forces 512 host devices (in its own process)."""
 
-import dataclasses
 import os
 import sys
 
@@ -11,35 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import pytest
 
-from repro.configs.base import ModelConfig, get_config
-
-
-def reduced_config(cfg: ModelConfig, **extra) -> ModelConfig:
-    """Reduced same-family config for CPU smoke tests."""
-    kw = dict(
-        num_layers=len(cfg.pattern),
-        d_model=64,
-        num_heads=4,
-        num_kv_heads=(max(1, min(cfg.num_kv_heads, 4))
-                      if cfg.num_kv_heads < cfg.num_heads else 4),
-        head_dim=16,
-        d_ff=128,
-        vocab_size=256,
-        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
-        encoder_seq_len=16 if cfg.is_encdec else 0,
-        num_encoder_layers=2 if cfg.is_encdec else 0,
-        num_image_tokens=8 if cfg.family == "vlm" else 0,
-        max_context=1 << 30,
-    )
-    if cfg.moe:
-        kw["moe"] = dataclasses.replace(
-            cfg.moe, num_experts=8, top_k=2, d_expert=32,
-            d_shared_expert=64 if cfg.moe.num_shared_experts else 0)
-    if cfg.ssm:
-        kw["ssm"] = dataclasses.replace(cfg.ssm, state_dim=8, head_dim=8,
-                                        chunk_size=4)
-    kw.update(extra)
-    return cfg.scaled(**kw)
+from repro.configs.reduced import reduced_config  # noqa: F401  (re-export)
 
 
 @pytest.fixture(scope="session")

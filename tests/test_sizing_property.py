@@ -3,6 +3,8 @@ system invariants."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sizing import (fixed_sizing, peak_sizing, simulate_policy,
