@@ -5,12 +5,20 @@ so the measured rate includes all per-application bookkeeping.
 
 Derived: scheduling ops/s vs the paper's claimed rates."""
 
+import argparse
+
 from benchmarks.common import row
 from repro.runtime import measure_cluster_throughput
 
 
 def main() -> None:
-    for n_jobs, pods in ((20_000, 4), (50_000, 8), (100_000, 16)):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for CI drift detection")
+    args = ap.parse_args()
+    grid = (((2_000, 2),) if args.smoke
+            else ((20_000, 4), (50_000, 8), (100_000, 16)))
+    for n_jobs, pods in grid:
         stats = measure_cluster_throughput(n_jobs=n_jobs, num_pods=pods)
         rate = stats["sched_ops_per_s"]
         row(f"sched_scalability/jobs{n_jobs}_pods{pods}",

@@ -1,17 +1,29 @@
-"""Paper Figs. 11-13: the video-transcoding pipeline analog.
+"""Paper Figs. 11-13: the video-transcoding pipeline analog, plus the
+multi-tenant sharing experiment (§9.3 resource-centric co-location).
 
-Three "resolutions" = three request-length classes (240P/720P/4K ->
-short/medium/long prompts).  Compare:
+Part 1 (fig11_video): three "resolutions" = three request-length classes
+(240P/720P/4K -> short/medium/long prompts).  Compare:
   * adaptive (history-sized page grants, continuous batching) vs
   * function-static (every request peak-provisioned, gg/ExCamera style).
+
+Part 2 (fig12_tenancy): the SAME three classes as three serve
+Applications co-located on one pod via ``Cluster.submit()``.  Compare:
+  * shared  -- one pod-level SharedPagePool, fair-share cross-app
+    preemption, per-app history-driven grants; vs
+  * private -- each app brings pool_pages/3 of its own (per-function
+    peak provisioning of the pool itself).
 
 Derived: completion wall time, pool utilization, denial/preempt counts.
 """
 
+import argparse
+import time
+
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row
 from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, NullExecutor
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
 
@@ -33,7 +45,6 @@ def run_policy(policy: str, prompt: int, gen: int, n: int = 64):
         eng.submit(Request(f"r{i}", p, gen))
     peak_util = 0.0
     steps = 0
-    import time
     t0 = time.perf_counter()
     while eng.step():
         peak_util = max(peak_util, pool.utilization)
@@ -44,16 +55,77 @@ def run_policy(policy: str, prompt: int, gen: int, n: int = 64):
     return wall, eng.stats, peak_util, pool
 
 
+def run_tenancy(shared: bool, n_per_app: int = 32, pool_pages: int = 192,
+                max_steps: int = 200_000):
+    """Three request-length-class apps on one pod, through the runtime."""
+    hist = HistoryStore()
+    cluster = Cluster(pods=1, history=hist, executor=NullExecutor(),
+                      pool_pages=pool_pages if shared else None)
+    handles = {}
+    rng = np.random.default_rng(0)
+    for cls, (prompt, gen) in CLASSES.items():
+        app = Application.serve(
+            "tinyllama-1.1b", reduced=True, name=f"app-{cls}",
+            max_batch=8, private_pool=not shared,
+            pool_pages=pool_pages if shared else pool_pages // len(CLASSES))
+        h = cluster.submit(app)
+        for i in range(n_per_app):
+            p = int(prompt * rng.uniform(0.6, 1.4))
+            h.submit_request(Request(f"{cls}-r{i}", p, gen))
+        handles[cls] = h
+
+    t0 = time.perf_counter()
+    peak_util, steps, alive = 0.0, 0, set(CLASSES)
+    while alive and steps < max_steps:
+        for cls in list(alive):
+            if not handles[cls].step()["alive"]:
+                alive.discard(cls)
+        if shared:
+            pool = cluster.pod_pool("pod0")
+            peak_util = max(peak_util, pool.utilization)
+        else:
+            used = sum(h.engine.pool.num_pages * h.engine.pool.utilization
+                       for h in handles.values())
+            peak_util = max(peak_util, used / pool_pages)
+        steps += 1
+    wall = (time.perf_counter() - t0) * 1e6
+    stats = {cls: handles[cls].serving_stats() for cls in CLASSES}
+    for h in handles.values():
+        h.release()
+    return wall, stats, peak_util
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per class (fig11) / per app (fig12)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI drift detection")
+    args = ap.parse_args()
+    n = 6 if args.smoke else args.requests
+
     for cls, (prompt, gen) in CLASSES.items():
         for policy in ("history", "fixed"):
             # 'fixed' with peak init pages == gg-style peak provisioning
-            wall, stats, util, pool = run_policy(policy, prompt, gen)
+            wall, stats, util, pool = run_policy(policy, prompt, gen, n=n)
             name = "adaptive" if policy == "history" else "static_peak"
             row(f"fig11_video/{cls}/{name}", wall / max(stats.decode_steps, 1),
                 f"completed={stats.completed};decode_steps={stats.decode_steps};"
                 f"peak_util={util:.2f};denials={pool.stats['denials']};"
                 f"preempt={stats.preempted}")
+
+    n_mt = 4 if args.smoke else max(args.requests // 2, 8)
+    for mode in ("shared", "private"):
+        wall, stats, util = run_tenancy(mode == "shared", n_per_app=n_mt)
+        done = sum(s["completed"] for s in stats.values())
+        preempt = sum(s["preempted"] for s in stats.values())
+        denials = sum(s["pool"]["denials"] for s in stats.values())
+        per_app = ";".join(
+            f"{cls}:done={s['completed']},preempt={s['preempted']}"
+            for cls, s in stats.items())
+        row(f"fig12_tenancy/{mode}", wall,
+            f"completed={done};peak_util={util:.2f};preempt={preempt};"
+            f"denials={denials};{per_app}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--backend", default="dense", choices=["dense", "paged"],
+                    help="dense slot cache, or KV pages + paged-attention "
+                         "kernel decode")
     args = ap.parse_args()
 
     cfg = get_config("tinyllama-1.1b").scaled(
@@ -33,7 +36,7 @@ def main():
     app = Application.serve(
         cfg, shape=ShapeConfig("serve-demo", "decode", 64, args.max_batch),
         name="serve-lm", max_batch=args.max_batch, pool_pages=128,
-        cache_len=256, policy="history")
+        cache_len=256, policy="history", backend=args.backend)
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor())
     handle = cluster.submit(app)
@@ -51,7 +54,8 @@ def main():
           f"({stats['tokens_generated']/max(wall, 1e-9):.1f} tok/s)")
     print(f"prefills={stats['prefills']} "
           f"decode_steps={stats['decode_steps']} "
-          f"preempted={stats['preempted']}")
+          f"preempted={stats['preempted']} "
+          f"mean_ttft={stats['mean_ttft_s'] * 1e3:.1f}ms")
     print(f"pool: grants={pool.stats['grants']} "
           f"scaleups={pool.stats['scaleups']} "
           f"denials={pool.stats['denials']}")

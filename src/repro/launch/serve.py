@@ -28,9 +28,18 @@ def main():
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--policy", default="history",
                     choices=["history", "fixed", "peak"])
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "paged"],
+                    help="serving ModelRunner (paged = KV in pool pages, "
+                         "decode via the paged-attention kernel)")
+    ap.add_argument("--private-pool", action="store_true",
+                    help="opt out of the pod-shared page pool")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
     args = ap.parse_args()
+    if args.backend != "dense" and not args.reduced:
+        ap.error("--backend needs --reduced: the default arm serves through "
+                 "the NullExecutor (no model, no kernel path)")
 
     cfg = get_config(args.arch)
     mesh_spec = MESHES[args.mesh]
@@ -40,7 +49,9 @@ def main():
         executor = JaxExecutor()
         app = Application.serve(args.arch, reduced=True,
                                 max_batch=min(args.max_batch, 4),
-                                pool_pages=128, policy=args.policy)
+                                pool_pages=128, policy=args.policy,
+                                backend=args.backend,
+                                private_pool=args.private_pool)
         prompt_rng = (8, 64)
         max_new = 16
     else:
@@ -52,7 +63,8 @@ def main():
         executor = NullExecutor()
         app = Application.serve(args.arch, shape="decode_32k",
                                 max_batch=args.max_batch, pool_pages=pages,
-                                policy=args.policy)
+                                policy=args.policy,
+                                private_pool=args.private_pool)
         prompt_rng = (64, 4096)
         max_new = 256
 
@@ -75,10 +87,18 @@ def main():
     print(f"[done] completed={stats['completed']} "
           f"tokens={stats['tokens_generated']} "
           f"decode_steps={stats['decode_steps']} "
-          f"preempted={stats['preempted']}")
+          f"preempted={stats['preempted']} "
+          f"mean_ttft={stats['mean_ttft_s'] * 1e3:.2f}ms "
+          f"mean_decode_step={stats['mean_decode_step_s'] * 1e3:.2f}ms")
     print(f"[pool] pages={pool.num_pages} peak_util={pool.utilization:.2f} "
           f"scaleups={pool.stats['scaleups']} "
           f"denials={pool.stats['denials']}")
+    sstats = handle.serving_stats()
+    if "shared_pool" in sstats:
+        sp = sstats["shared_pool"]
+        print(f"[pod-pool] pages={sp['num_pages']} "
+              f"util={sp['utilization']:.2f} "
+              f"cross_app_preempt={sp['cross_app_preemptions']}")
     sz = pool.sizing()
     print(f"[sizing/{args.policy}] init={sz.init:.0f} step={sz.step:.0f}")
     handle.release()

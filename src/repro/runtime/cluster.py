@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import itertools
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, TYPE_CHECKING, Tuple, Union
 
 from repro.checkpoint.recovery import StragglerWatchdog, elastic_replan
 from repro.core.history import HistoryStore
@@ -40,6 +40,9 @@ from repro.core.sizing import SizingSolution, solve_init_step
 from repro.runtime.application import Application
 from repro.runtime.executors import Executor, NullExecutor
 from repro.serving.kv_cache import Request
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.tenancy import SharedPagePool
 
 GB = 1 << 30
 SIZING_QUANTUM = 64 << 20          # 64 MiB allocation granularity
@@ -73,6 +76,38 @@ class AppHandle:
     @property
     def engine(self):
         return self.exec_state.get("engine")
+
+    @property
+    def runner(self):
+        """The serving backend (ModelRunner) bound to this application."""
+        return self.exec_state.get("runner")
+
+    def serving_stats(self) -> Dict:
+        """Denial / preemption / latency signals for autoscaling policies.
+
+        Combines the engine's request stats (TTFT, decode-step latency,
+        preemptions) with the page pool's grant/denial counters; when the
+        app serves from a pod-shared pool, the pod-level utilization and
+        per-app denial/preemption tallies ride along so a policy can see
+        WHO is starving whom."""
+        eng = self.engine
+        if eng is None:
+            return {}
+        out = eng.stats.as_dict()
+        out["pool"] = dict(eng.pool.stats)
+        out["pool_utilization"] = eng.pool.utilization
+        shared = getattr(eng.pool, "shared", None)
+        if shared is not None:
+            out["shared_pool"] = {
+                "num_pages": shared.num_pages,
+                "used_pages": shared.used_pages,
+                "utilization": shared.utilization,
+                "denials_by_app": dict(shared.stats["denials"]),
+                "preemptions_by_app": dict(shared.stats["preemptions"]),
+                "cross_app_preemptions":
+                    shared.stats["cross_app_preemptions"],
+            }
+        return out
 
     def _ensure_bound(self) -> None:
         if self.job.state != "running":
@@ -178,7 +213,8 @@ class Cluster:
     def __init__(self, pods: Union[int, List[PodState]] = 2, *,
                  mesh: Union[str, MeshSpec] = SINGLE_POD,
                  history: Optional[HistoryStore] = None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 pool_pages: Optional[int] = None):
         self.mesh = MESHES[mesh] if isinstance(mesh, str) else mesh
         if isinstance(pods, int):
             pods = [PodState(f"pod{i}", self.mesh.num_devices,
@@ -188,6 +224,23 @@ class Cluster:
         self.executor = executor or NullExecutor()
         self.handles: Dict[str, AppHandle] = {}
         self._job_ids = itertools.count()
+        # per-pod physical KV pools (multi-tenant serving); sized by
+        # ``pool_pages`` when given, else by the first tenant's request
+        self.pool_pages = pool_pages
+        self._pod_pools: Dict[str, "SharedPagePool"] = {}
+
+    def pod_pool(self, pod: str, *, default_pages: int = 256
+                 ) -> "SharedPagePool":
+        """The pod's single shared KV page pool (created lazily).  Every
+        serve application placed on ``pod`` gets a quota/weight view onto
+        this one physical pool unless it opts into a private pool."""
+        from repro.serving.tenancy import SharedPagePool
+        sp = self._pod_pools.get(pod)
+        if sp is None:
+            sp = SharedPagePool(self.pool_pages or default_pages,
+                                history=self.history)
+            self._pod_pools[pod] = sp
+        return sp
 
     # -- sizing (paper §9.3) -------------------------------------------------
     def size(self, app: Application) -> Tuple[int, Optional[SizingSolution]]:
@@ -217,7 +270,15 @@ class Cluster:
                                       history=self.history,
                                       overrides=overrides)
             if job.state == "running":
-                handle._ensure_bound()
+                try:
+                    handle._ensure_bound()
+                except Exception:
+                    # bind failed (e.g. duplicate serve name, unsupported
+                    # backend): the placed job would otherwise hold pod
+                    # bytes forever with no handle to release it through
+                    handle.exec_state.clear()
+                    self.scheduler.finish(job)
+                    raise
         self.handles[job.job_id] = handle
         return handle
 

@@ -24,11 +24,14 @@ from repro.serving.kv_cache import PagePool
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.runtime.cluster import AppHandle
 
+DEFAULT_POOL_PAGES = 256
+
 
 class Executor:
     """Interface the AppHandle lifecycle drives."""
 
     name = "null"
+    default_pool_pages = DEFAULT_POOL_PAGES
 
     def bind(self, handle: "AppHandle") -> None:
         """Materialize executable state for a placed application."""
@@ -38,13 +41,31 @@ class Executor:
     def train_step(self, handle: "AppHandle") -> Dict[str, float]:
         return {"loss": 0.0}
 
+    def build_pool(self, handle: "AppHandle") -> PagePool:
+        """The application's KV page pool.
+
+        Default: a quota/weight-scoped *view* onto the pod's single
+        :class:`~repro.serving.tenancy.SharedPagePool`, so every serve app
+        placed on one pod draws from one physical pool (the paper's
+        resource sharing).  ``options['private_pool']=True`` opts out into
+        the old one-pool-per-app peak provisioning (the benchmark's
+        baseline arm)."""
+        opts = handle.app.options
+        pages = int(opts.get("pool_pages", self.default_pool_pages))
+        policy = opts.get("policy", "history")
+        if opts.get("private_pool"):
+            return PagePool(pages, history=handle.cluster.history,
+                            app=handle.app.name, policy=policy)
+        shared = handle.cluster.pod_pool(handle.pod, default_pages=pages)
+        return shared.view(handle.app.name,
+                           quota=opts.get("quota_pages"),
+                           weight=float(opts.get("weight", 1.0)),
+                           policy=policy)
+
     def build_engine(self, handle: "AppHandle") -> ServingEngine:
         opts = handle.app.options
-        pool = PagePool(int(opts.get("pool_pages", 256)),
-                        history=handle.cluster.history,
-                        app=handle.app.name,
-                        policy=opts.get("policy", "history"))
-        return ServingEngine(pool, max_batch=int(opts.get("max_batch", 8)),
+        return ServingEngine(self.build_pool(handle),
+                             max_batch=int(opts.get("max_batch", 8)),
                              history=handle.cluster.history)
 
     def maybe_checkpoint(self, handle: "AppHandle") -> None:
@@ -58,6 +79,9 @@ class Executor:
         return 0
 
     def release(self, handle: "AppHandle") -> None:
+        engine = handle.exec_state.get("engine")
+        if engine is not None:
+            engine.shutdown()      # return pages to the pod's shared pool
         handle.exec_state.clear()
 
 
@@ -164,85 +188,34 @@ class JaxExecutor(Executor):
         return int(extra.get("cursor", 0))
 
     # -- serving ------------------------------------------------------------
-    def build_engine(self, handle: "AppHandle") -> ServingEngine:
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
+    default_pool_pages = 128
 
-        from repro.models import ImplConfig, build_model
+    def build_engine(self, handle: "AppHandle") -> ServingEngine:
+        from repro.serving.model_runner import build_runner
 
         app = handle.app
         opts = app.options
-        cfg = app.config
         max_batch = int(opts.get("max_batch", 4))
-        cache_len = int(opts.get("cache_len", 256))
-
-        model = build_model(cfg, ImplConfig(remat="none"))
-        params = model.init_params(jax.random.PRNGKey(self.seed))
-        decode = jax.jit(model.decode_step)
-        prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
-
-        state = {"cache": model.init_cache(max_batch, cache_len),
-                 "generated": {}}
-        slots: Dict[str, Any] = {}
-
-        engine_ref: Dict[str, ServingEngine] = {}
-
-        def prefill_fn(req):
-            toks = jax.random.randint(
-                jax.random.PRNGKey(hash(req.req_id) % 2**31),
-                (1, req.prompt_len), 0, cfg.vocab_size)
-            logits, rc = prefill(params, {"tokens": toks})
-            # evict slots of preempted requests (the engine re-queues them;
-            # only completion frees a slot in decode_fn) before picking one
-            running_ids = {r.req_id for r in engine_ref["engine"].running}
-            for rid in list(slots):
-                if rid not in running_ids:
-                    del slots[rid]
-            if req.req_id in slots:      # re-admission after preemption
-                slot = slots[req.req_id][0]
-            else:
-                slot = min(set(range(max_batch))
-                           - {s for s, _ in slots.values()})
-            slots[req.req_id] = (slot, req.prompt_len)
-            state["cache"] = jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=1),
-                state["cache"], rc)
-            state["generated"][req.req_id] = [int(jnp.argmax(logits[0, -1]))]
-
-        def decode_fn(running):
-            if not running:
-                return
-            toks = np.zeros((max_batch, 1), np.int32)
-            pos = 0
-            for req in running:
-                slot, plen = slots[req.req_id]
-                toks[slot, 0] = state["generated"][req.req_id][-1]
-                pos = max(pos, plen + req.generated)
-            logits, state["cache"] = decode(
-                params, jnp.asarray(toks), state["cache"],
-                jnp.asarray(pos, jnp.int32))
-            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
-            for req in running:
-                slot, _ = slots[req.req_id]
-                state["generated"][req.req_id].append(int(nxt[slot]))
-                if req.generated + 1 >= req.max_new_tokens:
-                    slots.pop(req.req_id, None)
-
-        pool = PagePool(int(opts.get("pool_pages", 128)),
-                        history=handle.cluster.history, app=app.name,
-                        policy=opts.get("policy", "history"))
-        handle.exec_state.update(model=model, params=params,
-                                 serve_state=state)
-        engine = ServingEngine(pool, max_batch=max_batch,
-                               step_fns=(prefill_fn, decode_fn),
-                               history=handle.cluster.history)
-        engine_ref["engine"] = engine
-        return engine
+        pool = self.build_pool(handle)
+        try:
+            runner = build_runner(opts.get("backend", "dense"), app.config,
+                                  seed=self.seed, max_batch=max_batch,
+                                  cache_len=int(opts.get("cache_len", 256)),
+                                  pool_pages=pool.physical_pages)
+        except Exception:
+            # the pool view is already registered on the pod: an orphan
+            # would dilute every tenant's fair share forever
+            close = getattr(pool, "close", None)
+            if close is not None:
+                close()
+            raise
+        handle.exec_state.update(model=runner.model, params=runner.params,
+                                 runner=runner)
+        return ServingEngine(pool, max_batch=max_batch, runner=runner,
+                             history=handle.cluster.history)
 
     def release(self, handle: "AppHandle") -> None:
         ck = handle.exec_state.get("checkpointer")
         if ck is not None:
             ck.wait()
-        handle.exec_state.clear()
+        super().release(handle)

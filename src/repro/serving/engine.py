@@ -3,60 +3,99 @@
 The serving-side runtime of the framework: admits requests against the
 page pool (sizing policy from history), runs prefill for new requests and
 batched decode for running ones, grows KV grants on demand, and preempts
-the newest request when the pool is exhausted (re-queued: the paper's
-at-least-once component re-execution).
+under pool pressure (re-queued: the paper's at-least-once component
+re-execution).
 
-The engine is deliberately execution-backend-agnostic: ``step_fns`` carry
-(prefill, decode) callables so tests can run a real tiny model while the
-scheduler benchmarks drive a null executor."""
+The engine is execution-backend-agnostic: model execution is carried by a
+:class:`~repro.serving.model_runner.ModelRunner` (``runner=``) or a raw
+``step_fns`` (prefill, decode) pair, so tests can run a real tiny model
+while the scheduler benchmarks drive a null executor with neither.
+
+Multi-tenancy: the ``pool`` may be a private
+:class:`~repro.serving.kv_cache.PagePool` or a
+:class:`~repro.serving.tenancy.PoolView` onto a pod-shared pool.  Under
+pressure the engine first asks the pool to arbitrate (``preempt_any`` --
+cross-app fair-share preemption), falling back to preempting its own
+newest request."""
 
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core.history import HistoryStore
-from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
+from repro.serving.kv_cache import PagePool, Request
 
 
 @dataclass
 class EngineStats:
     admitted: int = 0
     completed: int = 0
+    rejected: int = 0                  # could never fit pool/quota cap
     preempted: int = 0
     decode_steps: int = 0
     prefills: int = 0
     tokens_generated: int = 0
     wall_s: float = 0.0
+    # per-request latency signals (the autoscaling inputs)
+    ttft_s_sum: float = 0.0            # submit -> first token, summed
+    ttft_count: int = 0
+    decode_s_sum: float = 0.0          # summed decode-step wall time
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return self.ttft_s_sum / max(self.ttft_count, 1)
+
+    @property
+    def mean_decode_step_s(self) -> float:
+        return self.decode_s_sum / max(self.decode_steps, 1)
 
     def as_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["mean_ttft_s"] = self.mean_ttft_s
+        d["mean_decode_step_s"] = self.mean_decode_step_s
+        return d
 
 
 class ServingEngine:
     def __init__(self, pool: PagePool, max_batch: int = 8,
                  step_fns: Optional[Tuple[Callable, Callable]] = None,
-                 history: Optional[HistoryStore] = None):
+                 history: Optional[HistoryStore] = None,
+                 runner=None):
         self.pool = pool
         self.max_batch = max_batch
         self.queue: Deque[Request] = collections.deque()
         self.running: List[Request] = []
         self.stats = EngineStats()
+        self.runner = runner
+        if runner is not None:
+            runner.bind(self)
+            step_fns = (runner.prefill, runner.decode)
         self.step_fns = step_fns
         self.history = history
+        attach = getattr(pool, "attach", None)
+        if attach is not None:          # tenancy view: register for cross-app
+            attach(self)                # victim selection
 
     def submit(self, req: Request) -> None:
+        req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> List[Request]:
         admitted = []
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
+            if not self.pool.admissible(req):
+                # can NEVER complete under the pool/quota cap: rejecting
+                # beats an admit/grow-deny/preempt livelock that would
+                # also bleed co-tenants dry
+                self.queue.popleft()
+                req.state = "rejected"
+                self.stats.rejected += 1
+                continue
             if not self.pool.try_admit(req):
                 break
             self.queue.popleft()
@@ -65,10 +104,9 @@ class ServingEngine:
             self.stats.admitted += 1
         return admitted
 
-    def _preempt_newest(self) -> None:
-        if not self.running:
-            return
-        victim = max(self.running, key=lambda r: -r.generated)
+    def preempt(self, victim: Request) -> None:
+        """Release a running request's pages and requeue it for
+        re-execution (at-least-once)."""
         self.running.remove(victim)
         self.pool.release(victim)
         victim.state = "queued"
@@ -76,28 +114,59 @@ class ServingEngine:
         self.queue.appendleft(victim)
         self.stats.preempted += 1
 
+    def preempt_newest(self) -> bool:
+        """Preempt the request with the least progress; False when there is
+        nothing to preempt."""
+        if not self.running:
+            return False
+        self.preempt(min(self.running, key=lambda r: r.generated))
+        return True
+
+    def _reclaim(self) -> bool:
+        """Free pages under pressure.  A shared-pool view arbitrates across
+        every app on the pod (fair-share victim selection); a private pool
+        falls back to this engine's own newest request."""
+        preempt_any = getattr(self.pool, "preempt_any", None)
+        if preempt_any is not None:
+            if preempt_any():
+                return True
+        return self.preempt_newest()
+
     def step(self) -> bool:
         """One engine iteration.  Returns False when fully drained."""
         newly = self._admit()
         if self.step_fns is not None:
-            prefill_fn, decode_fn = self.step_fns
+            prefill_fn, _ = self.step_fns
             for req in newly:
                 prefill_fn(req)
                 self.stats.prefills += 1
         else:
             self.stats.prefills += len(newly)
+        now = time.perf_counter()
+        for req in newly:
+            if req.first_token_at is None:   # not a re-admission
+                req.first_token_at = now
+                self.stats.ttft_s_sum += now - req.submitted_at
+                self.stats.ttft_count += 1
 
         if not self.running:
             return bool(self.queue)
 
-        # grow grants before decoding; preempt if the pool is exhausted
+        # Grow grants before decoding (horizon=1: the next token's write
+        # slot must be page-backed); preempt under pool pressure.  The
+        # `req in self.running` condition skips requests preempted by an
+        # earlier reclaim in this pass -- growing one would grant pages to
+        # a request whose pages were just released (page leak).
         for req in list(self.running):
-            if not self.pool.grow(req):
-                self._preempt_newest()
+            while req in self.running and not self.pool.grow(req, horizon=1):
+                if not self._reclaim():
+                    break
 
         if self.step_fns is not None:
             _, decode_fn = self.step_fns
+            t0 = time.perf_counter()
             decode_fn(self.running)
+            self.stats.decode_s_sum += time.perf_counter() - t0
         for req in list(self.running):
             req.generated += 1
             self.stats.tokens_generated += 1
@@ -117,3 +186,14 @@ class ServingEngine:
                 break
         self.stats.wall_s = time.perf_counter() - t0
         return self.stats
+
+    def shutdown(self) -> None:
+        """Release every held page and detach from a shared pool (called on
+        application release so co-tenants get the pages back)."""
+        for req in list(self.running):
+            self.pool.release(req)
+        self.running.clear()
+        self.queue.clear()
+        close = getattr(self.pool, "close", None)
+        if close is not None:
+            close()

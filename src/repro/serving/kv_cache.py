@@ -33,7 +33,9 @@ class Request:
     max_new_tokens: int
     generated: int = 0
     pages: List[int] = field(default_factory=list)
-    state: str = "queued"           # queued | running | done | preempted
+    state: str = "queued"     # queued | running | done | preempted | rejected
+    submitted_at: float = 0.0       # engine-stamped (perf_counter)
+    first_token_at: Optional[float] = None
 
     @property
     def length(self) -> int:
@@ -41,6 +43,10 @@ class Request:
 
     def pages_needed(self, horizon: int = 0) -> int:
         return -(-(self.length + horizon) // PAGE_SIZE)
+
+    def max_pages(self) -> int:
+        """Pages needed at completion (prompt fully decoded)."""
+        return -(-(self.prompt_len + self.max_new_tokens) // PAGE_SIZE)
 
 
 class PagePool:
@@ -78,42 +84,85 @@ class PagePool:
                 self._sizing = solve_init_step(hist, quantum=1.0)
         return self._sizing
 
+    # -- physical allocation primitives (overridden by tenancy.PoolView) ----
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Take n physical pages, or None when they can't be granted."""
+        if n > len(self.free):
+            return None
+        return [self.free.pop() for _ in range(n)]
+
+    def _dealloc(self, pages: List[int]) -> None:
+        self.free.extend(pages)
+
+    def _page_cap(self) -> int:
+        """Hard page ceiling a single request can ever hold."""
+        return self.num_pages
+
+    def admissible(self, req: Request) -> bool:
+        """False when the request could NEVER complete under this pool's
+        hard cap -- no sequence of grows or preemptions can serve it, so
+        the engine must reject it instead of retrying forever (counted as
+        a permanent denial)."""
+        if req.max_pages() <= self._page_cap():
+            return True
+        self.stats["denials"] += 1
+        return False
+
     # -- allocation ---------------------------------------------------------
     def try_admit(self, req: Request) -> bool:
         """Initial grant: max(prompt pages, policy init)."""
         sz = self.sizing()
-        want = max(req.pages_needed(), int(sz.init))
-        if want > len(self.free):
+        # a policy init larger than the hard cap must not turn a servable
+        # request into a permanent denial: clamp, never below actual need
+        want = max(req.pages_needed(),
+                   min(max(req.pages_needed(), int(sz.init)),
+                       self._page_cap()))
+        got = self._alloc(want)
+        if got is None:
             self.stats["denials"] += 1
             return False
-        req.pages = [self.free.pop() for _ in range(want)]
+        req.pages = got
         req.state = "running"
         self.stats["grants"] += 1
         self.stats["grant_pages"] += want
         self._solve_counter += 1
         return True
 
-    def grow(self, req: Request) -> bool:
-        """Incremental grant when the request outgrows its pages."""
-        if req.pages_needed() <= len(req.pages):
+    def grow(self, req: Request, horizon: int = 0) -> bool:
+        """Incremental grant when the request outgrows its pages.
+
+        ``horizon`` asks for headroom beyond the current length: the engine
+        grows with horizon=1 so the NEXT token's write slot is always backed
+        by a physical page (the paged runner scatters into it)."""
+        if req.pages_needed(horizon) <= len(req.pages):
             return True
         sz = self.sizing()
-        want = max(int(sz.step), req.pages_needed() - len(req.pages))
-        if want > len(self.free):
+        need = req.pages_needed(horizon) - len(req.pages)
+        # clamp the policy step to the cap headroom (see try_admit): a
+        # too-big step would deny forever what `need` pages would serve
+        want = max(need, min(max(int(sz.step), need),
+                             self._page_cap() - len(req.pages)))
+        got = self._alloc(want)
+        if got is None:
             self.stats["denials"] += 1
             return False
-        req.pages.extend(self.free.pop() for _ in range(want))
+        req.pages.extend(got)
         self.stats["scaleups"] += 1
         return True
 
     def release(self, req: Request) -> None:
-        self.free.extend(req.pages)
+        self._dealloc(req.pages)
         self.stats["released"] += 1
         if self.history is not None:
             self.history.observe(self.app, "request", "pages",
                                  max(len(req.pages), 1))
         req.pages = []
         req.state = "done"
+
+    @property
+    def physical_pages(self) -> int:
+        """Size of the backing physical pool (the runner's page-array dim)."""
+        return self.num_pages
 
     @property
     def utilization(self) -> float:

@@ -1,0 +1,268 @@
+"""Model execution backends for the serving engine.
+
+The :class:`~repro.serving.engine.ServingEngine` owns admission, paging
+and preemption; a :class:`ModelRunner` owns the device state and the two
+model entry points the engine drives:
+
+* ``prefill(req)``  -- full forward over the prompt, caching KV.
+* ``decode(running)`` -- one batched greedy decode step.
+
+Two implementations:
+
+* :class:`DenseRunner` -- per-slot dense KV cache of ``cache_len`` tokens
+  (the previous inline executor closure, extracted).  Decode attends over
+  a contiguous cache via ``model.decode_step``; positions are shared
+  across the batch (the historical approximation).
+* :class:`PagedRunner` -- KV lives in the ``(pool_pages, PAGE_SIZE, KV,
+  hd)`` layout granted page-by-page by the engine's pool; decode attends
+  through :func:`repro.kernels.ops.paged_attention` (Pallas kernel on
+  TPU, interpreted ref path on CPU) driven by each request's page table.
+  Positions and valid lengths are exact per request, so co-batched
+  requests of different lengths decode correctly -- and the KV footprint
+  is the pages the sizing policy granted, not ``max_batch * cache_len``.
+
+Prompt tokens are synthesized from a *stable* digest of the request id
+(``zlib.crc32``): ``hash()`` is salted per process, which made served
+outputs nondeterministic across runs.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
+from repro.kernels import ops
+from repro.kernels.paged_attention import paged_attention_ref
+from repro.models import ImplConfig, build_model
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving.kv_cache import PAGE_SIZE, Request, page_table
+
+KV_DTYPE = jnp.bfloat16
+
+
+def synth_prompt(req_id: str, prompt_len: int, vocab: int) -> jax.Array:
+    """Deterministic synthetic prompt: stable across processes and runs."""
+    seed = zlib.crc32(req_id.encode()) % 2**31
+    return jax.random.randint(jax.random.PRNGKey(seed), (1, prompt_len),
+                              0, vocab)
+
+
+class ModelRunner:
+    """Backend interface the engine's step functions are bound to."""
+
+    backend = "null"
+
+    def __init__(self):
+        self.engine = None
+        self.generated: Dict[str, List[int]] = {}
+
+    def bind(self, engine) -> None:
+        self.engine = engine
+
+    def prefill(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def decode(self, running: List[Request]) -> None:
+        raise NotImplementedError
+
+
+class DenseRunner(ModelRunner):
+    """Slot-indexed dense KV cache; decode via ``model.decode_step``."""
+
+    backend = "dense"
+
+    def __init__(self, cfg: ModelConfig, *, seed: int = 0, max_batch: int = 4,
+                 cache_len: int = 256):
+        super().__init__()
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.model = build_model(cfg, ImplConfig(remat="none"))
+        self.params = self.model.init_params(jax.random.PRNGKey(seed))
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_len))
+        self.cache = self.model.init_cache(max_batch, cache_len)
+        self.slots: Dict[str, Any] = {}
+
+    def prefill(self, req: Request) -> None:
+        toks = synth_prompt(req.req_id, req.prompt_len, self.cfg.vocab_size)
+        logits, rc = self._prefill(self.params, {"tokens": toks})
+        # evict slots of preempted requests (the engine re-queues them;
+        # only completion frees a slot in decode) before picking one
+        running_ids = {r.req_id for r in self.engine.running}
+        for rid in list(self.slots):
+            if rid not in running_ids:
+                del self.slots[rid]
+        if req.req_id in self.slots:      # re-admission after preemption
+            slot = self.slots[req.req_id][0]
+        else:
+            slot = min(set(range(self.max_batch))
+                       - {s for s, _ in self.slots.values()})
+        self.slots[req.req_id] = (slot, req.prompt_len)
+        self.cache = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1),
+            self.cache, rc)
+        self.generated[req.req_id] = [int(jnp.argmax(logits[0, -1]))]
+
+    def decode(self, running: List[Request]) -> None:
+        if not running:
+            return
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = 0
+        for req in running:
+            slot, plen = self.slots[req.req_id]
+            toks[slot, 0] = self.generated[req.req_id][-1]
+            pos = max(pos, plen + req.generated)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        for req in running:
+            slot, _ = self.slots[req.req_id]
+            self.generated[req.req_id].append(int(nxt[slot]))
+            if req.generated + 1 >= req.max_new_tokens:
+                self.slots.pop(req.req_id, None)
+
+
+class PagedRunner(ModelRunner):
+    """KV in pool pages; decode through the paged-attention kernel.
+
+    Supports RoPE global-attention stacks (llama-family patterns); other
+    block kinds (SWA rings, SSM state, cross attention) keep the dense
+    backend until they grow paged layouts.
+
+    Device-memory note: each runner holds its OWN page arrays sized to
+    the physical pool (tenants run different models, so their KV arrays
+    cannot alias).  The pod's :class:`SharedPagePool` bounds the
+    *accounted* combined footprint; true on-device sharing of one array
+    set across same-model tenants needs a view-local page-id remap
+    (ROADMAP).
+    """
+
+    backend = "paged"
+
+    def __init__(self, cfg: ModelConfig, *, seed: int = 0,
+                 pool_pages: int = 128):
+        super().__init__()
+        if (any(k != ATTN_GLOBAL for k in cfg.pattern)
+                or cfg.rope_theta <= 0 or cfg.is_encdec
+                or cfg.family in ("vlm", "audio")):
+            raise ValueError(
+                f"backend='paged' supports global-attention RoPE stacks; "
+                f"{cfg.name} has pattern={cfg.pattern}")
+        self.cfg = cfg
+        self.model = build_model(cfg, ImplConfig(remat="none"))
+        self.params = self.model.init_params(jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(self.model.prefill, static_argnums=2)
+        nb, pat = cfg.num_blocks, len(cfg.pattern)
+        shape = (pool_pages, PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
+        self.k_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
+        self.v_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
+        # the Pallas kernel natively on TPU; its jnp oracle elsewhere (the
+        # interpreted kernel is validated against the oracle in
+        # tests/test_kernels.py, and is ~60x slower than the oracle on CPU)
+        self._paged_attn = (ops.paged_attention
+                            if jax.default_backend() == "tpu"
+                            else paged_attention_ref)
+        # page arrays are donated: XLA updates them in place instead of
+        # copying the whole pool per layer per token
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(7, 8))
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0, 1))
+
+    @staticmethod
+    def _scatter_fn(kp, vp, pages, k, v):
+        return (kp.at[pages].set(k.astype(KV_DTYPE)),
+                vp.at[pages].set(v.astype(KV_DTYPE)))
+
+    def prefill(self, req: Request) -> None:
+        """Forward over the prompt, then scatter its KV into the request's
+        granted pages (page p holds tokens [p*PAGE, (p+1)*PAGE))."""
+        assert req.pages, f"{req.req_id}: prefill before admission"
+        cfg = self.cfg
+        toks = synth_prompt(req.req_id, req.prompt_len, cfg.vocab_size)
+        cache_len = len(req.pages) * PAGE_SIZE
+        logits, cache = self._prefill(self.params, {"tokens": toks},
+                                      cache_len)
+        pages = jnp.asarray(req.pages, jnp.int32)
+        for layer in range(len(self.k_pages)):
+            j, i = divmod(layer, len(cfg.pattern))
+            kv = cache[f"p{i}_{cfg.pattern[i]}"]
+            # (nb, 1, KV, cache_len, hd) -> (n_pages, PAGE, KV, hd)
+            k = kv["k"][j, 0].transpose(1, 0, 2).reshape(
+                len(req.pages), PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
+            v = kv["v"][j, 0].transpose(1, 0, 2).reshape(
+                len(req.pages), PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
+            self.k_pages[layer], self.v_pages[layer] = self._scatter(
+                self.k_pages[layer], self.v_pages[layer], pages, k, v)
+        self.generated[req.req_id] = [int(jnp.argmax(logits[0, -1]))]
+
+    def _decode_fn(self, params, toks, positions, phys, off, table, vlen,
+                   k_pages, v_pages):
+        """One batched decode step over the whole stack (jitted; the page
+        arrays are donated so per-layer writes happen in place)."""
+        cfg = self.cfg
+        new_k, new_v = list(k_pages), list(v_pages)
+        x = self.model._embed(params, toks)
+        for layer in range(len(new_k)):
+            j, i = divmod(layer, len(cfg.pattern))
+            bp = jax.tree.map(lambda a: a[j],
+                              params["blocks"][f"p{i}_{cfg.pattern[i]}"])
+            h = T.apply_norm(cfg, bp["ln1"], x)
+            q, k, v = attn.project_qkv(bp["attn"], h, cfg, positions)
+            kp = new_k[layer].at[phys, off].set(k[:, 0].astype(KV_DTYPE))
+            vp = new_v[layer].at[phys, off].set(v[:, 0].astype(KV_DTYPE))
+            new_k[layer], new_v[layer] = kp, vp
+            o = self._paged_attn(q[:, 0], kp, vp, table, vlen)
+            x = x + attn.attn_out(bp["attn"], o[:, None])
+            h = T.apply_norm(cfg, bp["ln2"], x)
+            x = x + L.gated_mlp(bp["mlp"], h)
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(params["embed"], x, cfg.logit_softcap)
+        return jnp.argmax(logits[:, -1], -1), new_k, new_v
+
+    def decode(self, running: List[Request]) -> None:
+        if not running:
+            return
+        pos = np.asarray([r.length for r in running])     # write positions
+        for r, p in zip(running, pos):
+            if p // PAGE_SIZE >= len(r.pages):
+                raise RuntimeError(
+                    f"{r.req_id}: token {p} beyond granted pages "
+                    f"({len(r.pages)}) -- engine must grow with horizon=1")
+        toks = jnp.asarray([[self.generated[r.req_id][-1]] for r in running],
+                           jnp.int32)
+        maxp = max(len(r.pages) for r in running)
+        table = jnp.asarray(page_table(running, maxp))
+        vlen = jnp.asarray(pos + 1, jnp.int32)
+        positions = jnp.asarray(pos, jnp.int32)[:, None]  # (B, 1) exact
+        phys = jnp.asarray([r.pages[p // PAGE_SIZE]
+                            for r, p in zip(running, pos)], jnp.int32)
+        off = jnp.asarray(pos % PAGE_SIZE, jnp.int32)
+        nxt, self.k_pages, self.v_pages = self._decode(
+            self.params, toks, positions, phys, off, table, vlen,
+            self.k_pages, self.v_pages)
+        nxt = np.asarray(nxt)
+        for b, req in enumerate(running):
+            self.generated[req.req_id].append(int(nxt[b]))
+
+
+def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,
+                 max_batch: int = 4, cache_len: int = 256,
+                 pool_pages: int = 128) -> ModelRunner:
+    """Factory keyed by ``Application.options['backend']``."""
+    if backend == "dense":
+        return DenseRunner(cfg, seed=seed, max_batch=max_batch,
+                           cache_len=cache_len)
+    if backend == "paged":
+        return PagedRunner(cfg, seed=seed, pool_pages=pool_pages)
+    raise ValueError(f"unknown serving backend {backend!r} "
+                     "(expected 'dense' or 'paged')")

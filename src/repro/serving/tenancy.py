@@ -1,0 +1,217 @@
+"""Multi-tenant KV-page sharing: one physical pool per pod, many apps.
+
+The paper's resource-centric claim (§9.3) is that co-located applications
+share a pod's memory through history-driven per-request grants instead of
+each bringing a peak-provisioned private pool.  This module is the serving
+instantiation of that claim:
+
+* :class:`SharedPagePool` -- the single physical page pool of one pod.
+  It owns the free list, tracks per-app usage, and arbitrates *cross-app*
+  preemption: when any tenant is out of pages, the victim is taken from
+  the application furthest over its weighted fair share (not merely the
+  requester's own newest request).
+* :class:`PoolView` -- one application's window onto the shared pool.  It
+  IS a :class:`~repro.serving.kv_cache.PagePool` as far as the
+  :class:`~repro.serving.engine.ServingEngine` is concerned (same
+  try_admit / grow / release / sizing surface, per-app history-driven
+  grant policy), but physical pages come from the shared pool and are
+  capped by the view's quota.
+
+Quotas: ``quota`` may be an explicit page count (hard cap), the string
+``"fair"`` (dynamic weighted fair share, recomputed as tenants come and
+go), or None (work-conserving: an idle pool may be fully consumed by one
+tenant; the fair-share preemption policy claws pages back under
+contention).  Per-request grant sizes remain history-driven per app via
+the §9.3 sizing program, keyed by the view's app name.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+from repro.core.history import HistoryStore
+from repro.serving.kv_cache import PagePool
+
+
+class SharedPagePool:
+    """One pod's physical KV page pool, shared by N serving applications."""
+
+    def __init__(self, num_pages: int,
+                 history: Optional[HistoryStore] = None):
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages))
+        self.history = history
+        self.views: Dict[str, "PoolView"] = {}
+        self.stats = {"preemptions": {}, "cross_app_preemptions": 0,
+                      "denials": {}}
+
+    # -- tenancy ------------------------------------------------------------
+    def view(self, app: str, *,
+             quota: Union[int, str, None] = None, weight: float = 1.0,
+             policy: str = "history", fixed_init_pages: int = 2,
+             fixed_step_pages: int = 1) -> "PoolView":
+        """The (single) view of one application; app names must be unique
+        per pod -- a live duplicate would merge two engines' page
+        accounting onto one quota and corrupt victim selection."""
+        v = self.views.get(app)
+        if v is not None:
+            if v.engine is not None:
+                raise ValueError(
+                    f"serve application {app!r} is already live on this "
+                    "pod's shared pool: give each serve Application a "
+                    "unique name=")
+            return v
+        v = PoolView(self, app, quota=quota, weight=weight,
+                     policy=policy, fixed_init_pages=fixed_init_pages,
+                     fixed_step_pages=fixed_step_pages)
+        self.views[app] = v
+        return v
+
+    def _take(self, n: int) -> Optional[List[int]]:
+        if n > len(self.free):
+            return None
+        return [self.free.pop() for _ in range(n)]
+
+    def _give(self, pages: List[int]) -> None:
+        self.free.extend(pages)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / max(self.num_pages, 1)
+
+    def fair_share(self, view: "PoolView") -> float:
+        total = sum(v.weight for v in self.views.values()) or 1.0
+        return self.num_pages * view.weight / total
+
+    # -- cross-app preemption (the tenancy policy) --------------------------
+    def select_victim_view(self) -> Optional["PoolView"]:
+        """The app furthest over its weighted fair share that still has a
+        running request to give back."""
+        best, best_over = None, None
+        for v in self.views.values():
+            if v.engine is None or not v.engine.running:
+                continue
+            over = v.used - self.fair_share(v)
+            if best_over is None or over > best_over:
+                best, best_over = v, over
+        return best
+
+    def preempt_for(self, requester: "PoolView") -> bool:
+        """Free pages for ``requester`` by preempting the newest request of
+        the most over-share app (possibly the requester itself).  Returns
+        True when a preemption happened."""
+        victim_view = self.select_victim_view()
+        if victim_view is None:
+            return False
+        if not victim_view.engine.preempt_newest():
+            return False
+        p = self.stats["preemptions"]
+        p[victim_view.app] = p.get(victim_view.app, 0) + 1
+        if victim_view is not requester:
+            self.stats["cross_app_preemptions"] += 1
+        return True
+
+
+class PoolView(PagePool):
+    """One application's quota-capped window onto a :class:`SharedPagePool`.
+
+    Engine-compatible: grants and releases go through the PagePool logic
+    (history-driven sizing per app), but the physical free list belongs to
+    the shared pool and allocation is denied beyond this view's quota.
+    """
+
+    def __init__(self, shared: SharedPagePool, app: str, *,
+                 quota: Union[int, str, None] = None, weight: float = 1.0,
+                 policy: str = "history", fixed_init_pages: int = 2,
+                 fixed_step_pages: int = 1):
+        super().__init__(0, history=shared.history, app=app, policy=policy,
+                         fixed_init_pages=fixed_init_pages,
+                         fixed_step_pages=fixed_step_pages)
+        self.shared = shared
+        self.weight = float(weight)
+        self._quota = quota
+        self.used = 0
+        self.engine = None              # set by ServingEngine.attach
+        self.free = []                  # unused: physical list is shared
+        self._denial_cause = "physical"
+
+    # -- quota --------------------------------------------------------------
+    @property
+    def quota(self) -> int:
+        """Effective hard cap in pages for this app."""
+        if self._quota is None:
+            return self.shared.num_pages          # work-conserving
+        if self._quota == "fair":
+            return max(int(self.shared.fair_share(self)), 1)
+        return int(self._quota)
+
+    def _page_cap(self) -> int:
+        return min(self.quota, self.shared.num_pages)
+
+    def admissible(self, req) -> bool:
+        ok = super().admissible(req)
+        if not ok:
+            self._note_denial()
+        return ok
+
+    # -- physical allocation via the shared pool ----------------------------
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        if self.used + n > self.quota:
+            self._denial_cause = "quota"
+            self._note_denial()
+            return None
+        got = self.shared._take(n)
+        if got is None:
+            self._denial_cause = "physical"
+            self._note_denial()
+            return None
+        self.used += n
+        return got
+
+    def _dealloc(self, pages: List[int]) -> None:
+        self.used -= len(pages)
+        self.shared._give(pages)
+
+    def _note_denial(self) -> None:
+        d = self.shared.stats["denials"]
+        d[self.app] = d.get(self.app, 0) + 1
+
+    # -- engine hooks --------------------------------------------------------
+    def attach(self, engine) -> None:
+        self.engine = engine
+
+    def preempt_any(self) -> bool:
+        """Engine pressure hook.  A *physical* shortage is arbitrated
+        across ALL of the pod's apps (fair-share victim selection); a
+        *quota* denial can never be lifted by freeing co-tenants' pages,
+        so the app sheds its own load instead of punishing neighbours."""
+        if self._denial_cause == "quota":
+            return self.engine is not None and self.engine.preempt_newest()
+        return self.shared.preempt_for(self)
+
+    def close(self) -> None:
+        """Detach this app from the pod pool (on application release)."""
+        self.engine = None
+        self.shared.views.pop(self.app, None)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def num_pages(self) -> int:          # engine/pretty-print compatibility
+        return self.quota
+
+    @num_pages.setter
+    def num_pages(self, v: int) -> None:
+        pass                             # base __init__ assigns; quota rules
+
+    @property
+    def physical_pages(self) -> int:
+        return self.shared.num_pages
+
+    @property
+    def utilization(self) -> float:
+        return self.used / max(self.quota, 1)

@@ -1,5 +1,6 @@
 """Serving stack: page pool sizing policies, continuous batching engine,
-preemption, and engine-with-real-model integration."""
+preemption, multi-tenant pool sharing, serving backends (dense vs paged),
+and engine-with-real-model integration."""
 
 import jax
 import jax.numpy as jnp
@@ -10,9 +11,11 @@ from conftest import reduced_config
 from repro.configs import get_config
 from repro.core.history import HistoryStore
 from repro.models import ImplConfig, build_model
+from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import (PAGE_SIZE, PagePool, Request, page_table,
                                     pool_pages_for_budget)
+from repro.serving.tenancy import SharedPagePool
 
 
 def test_pool_admit_grow_release():
@@ -73,6 +76,50 @@ def test_engine_preempts_on_pressure():
     assert stats.preempted >= 1
 
 
+def test_grow_skips_requests_preempted_mid_pass():
+    """Regression: the grow loop iterates a snapshot of ``running``; a
+    request preempted mid-pass (its pages just released) must NOT get
+    ``pool.grow()`` called on it afterward -- that granted pages to a
+    queued request, which ``try_admit`` then overwrote on re-admission:
+    a permanent page leak."""
+    pool = PagePool(8, policy="fixed", fixed_init_pages=1, fixed_step_pages=1)
+    eng = ServingEngine(pool, max_batch=4)
+    # two "old" requests with staggered growth points...
+    eng.submit(Request("old0", PAGE_SIZE * 2 - 8, 64))
+    eng.submit(Request("old1", PAGE_SIZE * 2 - 30, 64))
+    for _ in range(3):
+        eng.step()
+    # ...and a late 4-page request that becomes the preemption victim the
+    # step old0 outgrows its grant (victim = least progress)
+    eng.submit(Request("newbie", PAGE_SIZE * 4 - 8, 64))
+    stats = eng.run_to_completion(max_steps=10_000)
+    assert stats.completed == 3
+    assert stats.preempted >= 1, "scenario must exercise mid-pass preemption"
+    assert sorted(pool.free) == list(range(8)), \
+        "pages leaked through grow-after-preempt"
+
+
+def test_engine_latency_stats():
+    pool = PagePool(64, policy="fixed", fixed_init_pages=1)
+    eng = ServingEngine(pool, max_batch=4)
+    for i in range(6):
+        eng.submit(Request(f"r{i}", prompt_len=16, max_new_tokens=8))
+    stats = eng.run_to_completion()
+    assert stats.ttft_count == 6          # one first-token per request
+    assert stats.mean_ttft_s >= 0.0
+    d = stats.as_dict()
+    assert "mean_ttft_s" in d and "mean_decode_step_s" in d
+    # re-admission after preemption must not double-count TTFT
+    pool2 = PagePool(9, policy="fixed", fixed_init_pages=2,
+                     fixed_step_pages=1)
+    eng2 = ServingEngine(pool2, max_batch=4)
+    for i in range(4):
+        eng2.submit(Request(f"p{i}", PAGE_SIZE * 2 - 4, PAGE_SIZE))
+    s2 = eng2.run_to_completion(max_steps=10_000)
+    assert s2.preempted >= 1
+    assert s2.ttft_count == 4
+
+
 def test_page_table_layout():
     rs = [Request("a", 1, 1), Request("b", 1, 1)]
     rs[0].pages = [3, 1]
@@ -88,6 +135,221 @@ def test_pool_pages_for_budget():
     assert n > 0
     # budget doubles -> pages double
     assert abs(pool_pages_for_budget(32 << 30, 32, 1024) - 2 * n) <= 1
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant sharing: one pod-level pool, many apps (paper §9.3)
+# ---------------------------------------------------------------------------
+
+def test_shared_pool_two_apps_fair_preemption():
+    """Two serve apps on one Cluster share ONE pod-level SharedPagePool;
+    combined usage never exceeds the physical pool and the preemption
+    victim comes from the app most over its fair share."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=NullExecutor(), pool_pages=14)
+    a = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="app-a", max_batch=4))
+    b = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="app-b", max_batch=4))
+    shared = a.engine.pool.shared
+    assert isinstance(shared, SharedPagePool)
+    assert b.engine.pool.shared is shared, "one physical pool per pod"
+    assert shared.num_pages == 14
+
+    for i in range(4):                      # app-a grows into a page hog
+        a.submit_request(Request(f"a{i}", PAGE_SIZE * 2 - 2, 300))
+    for _ in range(3):
+        a.step()
+    assert a.engine.pool.used > shared.fair_share(a.engine.pool)
+
+    for i in range(2):                      # app-b needs room to grow
+        b.submit_request(Request(f"b{i}", PAGE_SIZE - 2, 8))
+    for _ in range(6):
+        b.step()
+        combined = sum(v.used for v in shared.views.values())
+        assert combined == shared.used_pages
+        assert combined <= shared.num_pages, "over-committed physical pool"
+
+    assert a.engine.stats.preempted >= 1, "victim must come from app-a"
+    assert b.engine.stats.preempted == 0
+    assert shared.stats["preemptions"].get("app-a", 0) >= 1
+    assert shared.stats["cross_app_preemptions"] >= 1
+    a.release()
+    b.release()
+    assert sorted(shared.free) == list(range(14)), "pages must be returned"
+    assert not shared.views
+
+
+def test_shared_pool_quota_enforced():
+    cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=16)
+    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="quota-app", max_batch=4,
+                                         quota_pages=2))
+    h.submit_request(Request("small", PAGE_SIZE - 4, 4))
+    big = Request("big", PAGE_SIZE * 3, 4)     # needs 4 pages > quota 2:
+    h.submit_request(big)                      # can never complete
+    view = h.engine.pool
+    for _ in range(10):
+        h.step()
+        assert view.used <= 2, "quota must cap usage below the free pool"
+    stats = h.serving_stats()
+    assert stats["completed"] == 1                        # small finished
+    assert stats["rejected"] == 1 and big.state == "rejected", \
+        "an unservable request must be rejected, not retried forever"
+    assert view.shared.stats["denials"].get("quota-app", 0) >= 1
+    assert stats["shared_pool"]["denials_by_app"]["quota-app"] >= 1
+    h.release()
+
+
+def test_quota_pressure_does_not_preempt_cotenants():
+    """A quota denial cannot be lifted by freeing co-tenants' pages: the
+    over-quota app must shed its OWN load, not trigger cross-app
+    preemption of innocent neighbours (regression: quota-bound growth
+    preempted other apps and livelocked)."""
+    cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=32)
+    a = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="capped", max_batch=4,
+                                         quota_pages=3))
+    b = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="bystander", max_batch=4))
+    for i in range(2):       # each needs 2 pages by completion; 4 > quota 3
+        a.submit_request(Request(f"a{i}", PAGE_SIZE - 4, 132))
+    for i in range(2):
+        b.submit_request(Request(f"b{i}", PAGE_SIZE - 4, 300))
+    for _ in range(3):
+        b.step()             # bystander holds running requests throughout
+    alive = True
+    for _ in range(400):
+        if not alive:
+            break
+        alive = a.step()["alive"]
+    shared = a.engine.pool.shared
+    assert a.serving_stats()["completed"] == 2   # sequentially, under quota
+    assert a.engine.stats.preempted >= 1         # shed its own load
+    assert b.engine.stats.preempted == 0, "bystander must not be preempted"
+    assert shared.stats["cross_app_preemptions"] == 0
+    a.release()
+    b.release()
+
+
+def test_duplicate_serve_names_rejected():
+    """Two live serve apps with one name would merge their page accounting
+    onto a single PoolView: the pod pool must refuse the second -- and the
+    failed submit must not leak the placed job's pod bytes."""
+    cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=16)
+    cluster.submit(Application.serve("tinyllama-1.1b", reduced=True))
+    cap1 = cluster.capacity()
+    with pytest.raises(ValueError, match="unique name"):
+        cluster.submit(Application.serve("tinyllama-1.1b", reduced=True))
+    assert cluster.capacity() == cap1, "failed bind must release its job"
+
+
+def test_policy_step_clamped_to_cap():
+    """A sizing step/init larger than the quota (or pool) headroom must be
+    clamped, not turned into a permanent denial: un-clamped, a servable
+    request livelocks through admit/grow-deny/self-preempt forever."""
+    shared = SharedPagePool(16)
+    view = shared.view("clamped", quota=2, policy="fixed",
+                       fixed_init_pages=1, fixed_step_pages=3)
+    eng = ServingEngine(view, max_batch=2)
+    eng.submit(Request("r", PAGE_SIZE - 4, 8))      # needs 2 pages total
+    stats = eng.run_to_completion(max_steps=200)
+    assert stats.completed == 1 and stats.rejected == 0
+
+    pool = PagePool(2, policy="fixed", fixed_init_pages=1,
+                    fixed_step_pages=5)             # step 5 > 2-page pool
+    eng2 = ServingEngine(pool, max_batch=1)
+    eng2.submit(Request("r2", PAGE_SIZE - 4, 8))
+    s2 = eng2.run_to_completion(max_steps=200)
+    assert s2.completed == 1 and s2.rejected == 0
+    assert len(pool.free) == 2
+
+
+def test_engine_rejects_request_larger_than_pool():
+    pool = PagePool(4, policy="fixed", fixed_init_pages=1)
+    eng = ServingEngine(pool, max_batch=4)
+    eng.submit(Request("huge", PAGE_SIZE * 6, 8))   # 7 pages > 4-page pool
+    eng.submit(Request("ok", PAGE_SIZE, 8))
+    stats = eng.run_to_completion(max_steps=100)
+    assert stats.rejected == 1
+    assert stats.completed == 1
+
+
+def test_private_pool_opt_out():
+    cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=64)
+    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="loner", private_pool=True,
+                                         pool_pages=8))
+    assert isinstance(h.engine.pool, PagePool)
+    assert not hasattr(h.engine.pool, "shared")
+    assert not cluster.pod_pool("pod0").views     # nothing registered
+    h.release()
+
+
+# ---------------------------------------------------------------------------
+# serving backends: DenseRunner vs PagedRunner (ModelRunner layer)
+# ---------------------------------------------------------------------------
+
+def _serve_tokens(backend: str, *, pool_pages=32, n=3, prompt=200,
+                  max_new=6, policy="history", max_batch=4):
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    app = Application.serve("tinyllama-1.1b", reduced=True,
+                            max_batch=max_batch, pool_pages=pool_pages,
+                            cache_len=512, policy=policy, backend=backend)
+    h = cluster.submit(app)
+    for i in range(n):
+        h.submit_request(Request(f"r{i}", prompt_len=prompt,
+                                 max_new_tokens=max_new))
+    stats = h.run(max_steps=5000)
+    tokens = {rid: list(t) for rid, t in h.runner.generated.items()}
+    h.release()
+    return stats, tokens
+
+
+def test_paged_runner_matches_dense_tokens():
+    """backend='paged' (pool-page KV + paged-attention decode) must produce
+    the SAME tokens as backend='dense' for the same seed."""
+    dense_stats, dense_toks = _serve_tokens("dense")
+    paged_stats, paged_toks = _serve_tokens("paged")
+    assert dense_stats["completed"] == paged_stats["completed"] == 3
+    assert dense_toks == paged_toks
+    # multi-page prompts actually exercised the page tables
+    assert all(len(t) == 7 for t in paged_toks.values())  # prefill + 6
+
+
+def test_paged_backend_preemption_readmission():
+    """Paged serving must survive preemption: pages released, request
+    re-prefilled into fresh pages, decode correct thereafter."""
+    # prompt 200 = 2 pages; growth past token 256 with a full 8-page pool
+    # forces preemption + re-prefill into different physical pages
+    stats, tokens = _serve_tokens("paged", pool_pages=8, n=4, prompt=200,
+                                  max_new=60, policy="fixed")
+    assert stats["preempted"] >= 1, "scenario must exercise preemption"
+    assert stats["completed"] == 4
+    assert all(len(t) == 61 for t in tokens.values())
+
+
+def test_paged_backend_rejects_unsupported_arch():
+    from repro.serving.model_runner import build_runner
+    cfg = reduced_config(get_config("gemma3-12b"))   # sliding-window blocks
+    with pytest.raises(ValueError, match="paged"):
+        build_runner("paged", cfg)
+    with pytest.raises(ValueError, match="backend"):
+        build_runner("sparse", reduced_config(get_config("tinyllama-1.1b")))
+
+
+def test_failed_bind_leaks_neither_job_nor_pool_view():
+    """A bind that fails after the pool view is registered must close the
+    view (an orphan would dilute fair shares forever) AND release the
+    placed job's pod bytes."""
+    cluster = Cluster(pods=1, executor=JaxExecutor(), pool_pages=12)
+    cap0 = cluster.capacity()
+    with pytest.raises(ValueError, match="backend"):
+        cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         name="bad", backend="sparse"))
+    assert not cluster.pod_pool("pod0").views, "orphan PoolView left behind"
+    assert cluster.capacity() == cap0
 
 
 def test_engine_with_real_model(rng):
