@@ -1,0 +1,219 @@
+"""Autoscale control-plane benchmark: bursty multi-tenant serving,
+static quotas vs the `repro.autoscale` feedback loop.
+
+Closed-loop scenario: three serve applications co-located on one pod's
+shared KV pool, driven by phased bursty traffic --
+
+* ``hot``  -- bursts on even phases, quiet on odd ones;
+* ``warm`` -- bursts on odd phases;
+* ``cold`` -- one burst in the first phase, then idle forever (the
+  parking candidate).
+
+Arms:
+
+* ``static``     -- every app keeps a fixed ``pool/3`` page quota and
+  its submitted byte footprint forever (peak provisioning);
+* ``autoscaled`` -- `Cluster.tick()` drives target-tracking scale
+  up/down, demand-weighted quota rebalancing, and idle parking; parked
+  apps are transparently unparked when their next burst arrives.
+
+Derived metrics: time-integrated provisioned footprint (quota pages and
+scheduler bytes -- the paper's "resource consumption"), completion
+counts, and TTFT, which autoscaling must hold at-or-better while
+shrinking the footprint.  A second section microbenchmarks park/unpark
+warm-restart latency on a real (reduced) model with the paged backend.
+"""
+
+import argparse
+import itertools
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_json, row
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.serving.kv_cache import Request
+
+APPS = ("hot", "warm", "cold")
+NUM_PHASES = 4
+
+
+def arrival_rate(app: str, t: int, phase_len: int) -> int:
+    """Requests per tick for one app at tick ``t``.  Offered load is kept
+    under the service rate (max_batch x steps_per_tick) so queues drain
+    between bursts -- saturation would hide the idle windows autoscaling
+    exploits."""
+    phase = (t // phase_len) % NUM_PHASES
+    if app == "hot":
+        return 2 if phase % 2 == 0 else 0
+    if app == "warm":
+        return 2 if phase % 2 == 1 else 0
+    # cold: an opening burst, a long idle stretch (the parking window),
+    # then one late burst that exercises the transparent unpark
+    return 2 if (t < phase_len or t // phase_len == 7) else 0
+
+
+def run_arm(autoscale: bool, *, ticks: int, phase_len: int,
+            pool_pages: int, steps_per_tick: int = 6):
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=NullExecutor(), pool_pages=pool_pages)
+    if autoscale:
+        from repro.autoscale import QuotaRebalancer
+        cluster.enable_autoscale(
+            idle_park_s=1.5 * phase_len, denial_target_per_s=2.0,
+            cooldown_up_s=1.0, cooldown_down_s=max(phase_len / 2, 1.0),
+            confirm_ticks=2,
+            rebalancer=QuotaRebalancer(headroom=2.0))
+    handles = {}
+    for name in APPS:
+        handles[name] = cluster.submit(Application.serve(
+            "tinyllama-1.1b", reduced=True, name=name, max_batch=8,
+            quota_pages=pool_pages // len(APPS)))
+    rng = np.random.default_rng(0)
+    rid = itertools.count()
+    integ = {"quota_pages": 0.0, "used_pages": 0.0, "demand_bytes": 0.0}
+    parks = unparks = 0
+    inflight = []                        # (request, submit tick)
+    ttft_ticks = []                      # logical-clock TTFT per request
+    t0 = time.perf_counter()
+
+    def pump(n):
+        for _ in range(n):
+            for h in handles.values():
+                if not h.parked:
+                    h.step()
+
+    def harvest(t):
+        for req, t_sub in list(inflight):
+            if req.first_token_at is not None:
+                ttft_ticks.append(t - t_sub)
+                inflight.remove((req, t_sub))
+            elif req.state == "rejected":
+                inflight.remove((req, t_sub))
+
+    for t in range(ticks):
+        for name, h in handles.items():
+            for _ in range(arrival_rate(name, t, phase_len)):
+                was_parked = h.parked
+                req = Request(f"{name}-{next(rid)}",
+                              int(rng.integers(48, 320)),
+                              int(rng.integers(8, 24)))
+                h.submit_request(req)
+                inflight.append((req, t))
+                unparks += was_parked and not h.parked
+        # reconcile mid-tick: a quota rebalance triggered by this tick's
+        # burst can serve the same tick's arrivals
+        pump(steps_per_tick // 2)
+        for act in cluster.tick(now=float(t)):
+            parks += act["action"] == "park"
+        pump(steps_per_tick - steps_per_tick // 2)
+        harvest(t)
+        pool = cluster.pod_pool("pod0")
+        integ["quota_pages"] += sum(
+            0 if v.parked else min(v.quota, pool.num_pages)
+            for v in pool.views.values())
+        integ["used_pages"] += pool.used_pages
+        integ["demand_bytes"] += sum(
+            h.job.demand_bytes for h in handles.values())
+    # drain what's still in flight so completion/TTFT are final
+    for _ in range(50_000):
+        if not any(h.step()["alive"] for h in handles.values()
+                   if not h.parked):
+            break
+    harvest(ticks)
+    wall = (time.perf_counter() - t0) * 1e6
+    stats = {n: h.serving_stats() for n, h in handles.items()}
+    for h in handles.values():
+        h.release()
+    summary = {
+        "completed": sum(s["completed"] for s in stats.values()),
+        "rejected": sum(s["rejected"] for s in stats.values()),
+        "preempted": sum(s["preempted"] for s in stats.values()),
+        "mean_ttft_ticks": (sum(ttft_ticks) / len(ttft_ticks)
+                            if ttft_ticks else 0.0),
+        "mean_ttft_us": 1e6 * sum(s["ttft_s_sum"] for s in stats.values())
+        / max(sum(s["ttft_count"] for s in stats.values()), 1),
+        "mean_quota_pages": integ["quota_pages"] / ticks,
+        "mean_used_pages": integ["used_pages"] / ticks,
+        "mean_demand_mb": integ["demand_bytes"] / ticks / 2**20,
+        "parks": parks,
+        "unparks": unparks,
+    }
+    return wall, summary
+
+
+def bench_park_warm_restart(smoke: bool):
+    """Real-model park/unpark round trip (paged backend): how fast is
+    the warm restart, and how much of the footprint does parking free."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="park-demo", max_batch=4,
+        pool_pages=32, cache_len=512, backend="paged"))
+    n = 2 if smoke else 4
+    for i in range(n):
+        h.submit_request(Request(f"r{i}", 200, 24))
+    for _ in range(4):
+        h.step()
+    bytes_before = h.job.demand_bytes
+    pages_before = h.engine.pool.used
+    t0 = time.perf_counter()
+    receipt = h.park()
+    park_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    restore = h.unpark()
+    unpark_us = (time.perf_counter() - t0) * 1e6
+    stats = h.run(max_steps=10_000)
+    h.release()
+    page_frac = receipt["freed_pages"] / max(pages_before, 1)
+    byte_frac = receipt["freed_bytes"] / max(bytes_before, 1)
+    row("autoscale/park_warm_restart_paged", park_us,
+        f"unpark_us={unpark_us:.0f};freed_page_frac={page_frac:.2f};"
+        f"freed_byte_frac={byte_frac:.2f};"
+        f"restored={restore['restored_requests']};"
+        f"completed={stats['completed']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=96)
+    ap.add_argument("--phase-len", type=int, default=12)
+    ap.add_argument("--pool-pages", type=int, default=96)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI drift detection")
+    args = ap.parse_args()
+    ticks = 48 if args.smoke else args.ticks
+    phase_len = 6 if args.smoke else args.phase_len
+
+    results = {}
+    for arm, auto in (("static", False), ("autoscaled", True)):
+        wall, s = run_arm(auto, ticks=ticks, phase_len=phase_len,
+                          pool_pages=args.pool_pages)
+        results[arm] = s
+        row(f"autoscale/{arm}", wall / ticks,
+            f"completed={s['completed']};rejected={s['rejected']};"
+            f"preempt={s['preempted']};"
+            f"mean_ttft_ticks={s['mean_ttft_ticks']:.3f};"
+            f"mean_ttft_us={s['mean_ttft_us']:.0f};"
+            f"mean_quota_pages={s['mean_quota_pages']:.1f};"
+            f"mean_used_pages={s['mean_used_pages']:.1f};"
+            f"mean_demand_mb={s['mean_demand_mb']:.1f};"
+            f"parks={s['parks']};unparks={s['unparks']}")
+    st, au = results["static"], results["autoscaled"]
+    quota_save = 1 - au["mean_quota_pages"] / max(st["mean_quota_pages"], 1e-9)
+    bytes_save = 1 - au["mean_demand_mb"] / max(st["mean_demand_mb"], 1e-9)
+    dttft = au["mean_ttft_ticks"] - st["mean_ttft_ticks"]
+    row("autoscale/savings", 0.0,
+        f"quota_pages_saved={quota_save:.1%};"
+        f"demand_bytes_saved={bytes_save:.1%};"
+        f"ttft_delta_ticks_vs_static={dttft:+.3f}")
+
+    bench_park_warm_restart(args.smoke)
+    emit_json("autoscale", extra={"ticks": ticks, "phase_len": phase_len,
+                                  "pool_pages": args.pool_pages,
+                                  "smoke": args.smoke})
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ Derived: scheduling ops/s vs the paper's claimed rates."""
 
 import argparse
 
-from benchmarks.common import row
+from benchmarks.common import emit_json, row
 from repro.runtime import measure_cluster_throughput
 
 
@@ -25,6 +25,7 @@ def main() -> None:
             1e6 / max(rate, 1),
             f"ops_per_s={rate:.0f};paper_global=50000;paper_rack=20000;"
             f"finished={stats['finished']}")
+    emit_json("scheduler", extra={"smoke": args.smoke})
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import emit_json, row
 from repro.core.history import HistoryStore
 from repro.runtime import Application, Cluster, NullExecutor
 from repro.serving.engine import ServingEngine
@@ -126,6 +126,7 @@ def main() -> None:
         row(f"fig12_tenancy/{mode}", wall,
             f"completed={done};peak_util={util:.2f};preempt={preempt};"
             f"denials={denials};{per_app}")
+    emit_json("serving_pipeline", extra={"smoke": args.smoke})
 
 
 if __name__ == "__main__":

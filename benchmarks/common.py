@@ -1,11 +1,20 @@
-"""Benchmark helpers: timing + CSV row emission.
+"""Benchmark helpers: timing, CSV row emission, and JSON artifacts.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
-the figure-specific metric, e.g. %-memory-saved)."""
+the figure-specific metric, e.g. %-memory-saved).  Rows are also
+buffered so ``emit_json(bench)`` can persist the whole run as
+``BENCH_<bench>.json`` under ``artifacts/bench/`` (override with
+``$BENCH_ARTIFACT_DIR``) -- the machine-readable record CI uploads, so
+the perf trajectory is trackable across PRs instead of living in log
+scrollback."""
 
+import json
+import os
 import sys
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
+
+_ROWS: List[Dict] = []
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
@@ -19,6 +28,33 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                  "derived": derived})
+
+
+def emit_json(bench: str, extra: Optional[Dict] = None,
+              out_dir: Optional[str] = None) -> str:
+    """Write every ``row()`` so far to ``BENCH_<bench>.json``.  Returns
+    the path.  ``derived`` strings stay verbatim (they are already
+    ``k=v;k=v`` records); ``extra`` carries bench-level context such as
+    parameters or environment."""
+    out_dir = out_dir or os.environ.get("BENCH_ARTIFACT_DIR",
+                                        "artifacts/bench")
+    os.makedirs(out_dir, exist_ok=True)
+    payload = {
+        "bench": bench,
+        "argv": sys.argv[1:],
+        "unix_time": int(time.time()),
+        "rows": list(_ROWS),
+        "extra": extra or {},
+    }
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    print(f"[artifact] {path}", flush=True)
+    return path
 
 
 def block(x):

@@ -1,0 +1,35 @@
+"""repro.autoscale -- the resource-centric control plane.
+
+Closes the feedback loop the paper's headline result rests on: the
+platform watches each serve application's windowed signals
+(:mod:`~repro.autoscale.metrics`), pluggable policies turn them into
+scale/park decisions (:mod:`~repro.autoscale.policy`), a tick-driven
+controller applies them with hysteresis and cooldowns
+(:mod:`~repro.autoscale.controller`), and idle applications are parked
+-- KV drained to host, pool pages and scheduler bytes released -- and
+transparently unparked on the next request
+(:mod:`~repro.autoscale.parking`).
+
+Typical use::
+
+    cluster = Cluster(pods=1, executor=JaxExecutor())
+    cluster.enable_autoscale(idle_park_s=30.0)
+    handle = cluster.submit(Application.serve(..., quota_pages=32))
+    ...
+    cluster.tick()          # one reconcile round (call from your loop)
+"""
+
+from repro.autoscale.controller import AppRecord, AutoscaleController
+from repro.autoscale.metrics import MetricsWindow, stats_delta
+from repro.autoscale.parking import (ParkedApp, ParkedRequest, park_app,
+                                     unpark_app)
+from repro.autoscale.policy import (AppPolicy, Decision, IdleParker,
+                                    QuotaRebalancer, TargetTracking,
+                                    default_policies, sizing_step_bytes)
+
+__all__ = [
+    "AppPolicy", "AppRecord", "AutoscaleController", "Decision",
+    "IdleParker", "MetricsWindow", "ParkedApp", "ParkedRequest",
+    "QuotaRebalancer", "TargetTracking", "default_policies", "park_app",
+    "sizing_step_bytes", "stats_delta", "unpark_app",
+]

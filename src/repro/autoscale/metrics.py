@@ -1,0 +1,133 @@
+"""Metrics windows: cumulative serving counters -> decayed per-window rates.
+
+``AppHandle.serving_stats()`` surfaces monotonic lifetime counters (the
+right primitive for accounting) but a scaling policy reasons about *rates*
+-- TTFT of the last window, denials per second, whether the app saw any
+traffic at all.  :class:`MetricsWindow` is the bridge: feed it one raw
+stats snapshot per control-plane tick and it maintains
+
+* ``window`` -- the raw deltas of the just-closed window (counters
+  subtracted, gauges passed through), and
+* ``rates`` -- EWMA-smoothed derived signals (``ttft_s``,
+  ``decode_step_s``, ``denials_per_s``, ``tokens_per_s``,
+  ``utilization``, ``queue_len``, ``num_running``), the paper's decayed
+  history applied to the control loop, plus
+* idleness tracking (``idle_s``) for the parking policy.
+
+:func:`stats_delta` is the underlying windowed-semantics primitive, also
+exposed through ``AppHandle.serving_stats(since=...)``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.serving.engine import EngineStats
+
+#: monotonic counters at the top level of a serving_stats() dict
+ENGINE_COUNTERS = EngineStats.COUNTERS
+
+#: monotonic counters inside its ``pool`` sub-dict (PagePool.stats)
+POOL_COUNTERS = ("grants", "grant_pages", "denials", "scaleups", "released")
+
+
+def stats_delta(cur: Dict, since: Dict) -> Dict:
+    """Windowed view of a ``serving_stats()`` dict: counters accumulated
+    since the ``since`` snapshot, gauges (utilization, queue depth, pool
+    sizes) taken from ``cur``.  Window means (``mean_ttft_s``,
+    ``mean_decode_step_s``) are recomputed from the deltas."""
+    out = dict(cur)
+    for k in ENGINE_COUNTERS:
+        if k in out:
+            out[k] = out[k] - since.get(k, 0)
+    out["mean_ttft_s"] = out.get("ttft_s_sum", 0.0) / max(
+        out.get("ttft_count", 0), 1)
+    out["mean_decode_step_s"] = out.get("decode_s_sum", 0.0) / max(
+        out.get("decode_steps", 0), 1)
+    if isinstance(cur.get("pool"), dict):
+        spool = since.get("pool", {})
+        out["pool"] = {k: v - spool.get(k, 0) if k in POOL_COUNTERS else v
+                       for k, v in cur["pool"].items()}
+    if isinstance(cur.get("shared_pool"), dict):
+        sp = dict(cur["shared_pool"])
+        ss = since.get("shared_pool", {})
+        sp["cross_app_preemptions"] = (
+            sp.get("cross_app_preemptions", 0)
+            - ss.get("cross_app_preemptions", 0))
+        for key in ("denials_by_app", "preemptions_by_app"):
+            prev = ss.get(key, {})
+            sp[key] = {a: n - prev.get(a, 0)
+                       for a, n in sp.get(key, {}).items()}
+        out["shared_pool"] = sp
+    return out
+
+
+class MetricsWindow:
+    """Per-application window state for the autoscale controller.
+
+    ``observe(stats, now)`` closes one window: the first call only
+    establishes the baseline; every later call computes deltas against
+    the previous raw snapshot and folds the derived rates into an EWMA
+    with weight ``alpha`` on the new window (the §4.2 decaying-histogram
+    idea applied to control signals).
+    """
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = float(alpha)
+        self.window: Dict = {}          # raw deltas of the last window
+        self.rates: Dict[str, float] = {}   # EWMA-smoothed signals
+        self.now: Optional[float] = None
+        self.last_active_t: Optional[float] = None
+        self._raw: Optional[Dict] = None
+        self._t: Optional[float] = None
+
+    def _smooth(self, key: str, value: Optional[float]) -> None:
+        if value is None:
+            return                       # no sample this window: hold
+        prev = self.rates.get(key)
+        self.rates[key] = (value if prev is None
+                           else self.alpha * value
+                           + (1.0 - self.alpha) * prev)
+
+    def observe(self, stats: Dict, now: float) -> Dict:
+        """Fold one raw ``serving_stats()`` snapshot taken at ``now``.
+        Returns the smoothed ``rates`` dict."""
+        now = float(now)
+        self.now = now
+        if self._raw is None:            # baseline window
+            self._raw, self._t = stats, now
+            self.last_active_t = now
+            return self.rates
+        dt = max(now - self._t, 1e-9)
+        d = stats_delta(stats, self._raw)
+        self.window = d
+        self._raw, self._t = stats, now
+
+        pool = d.get("pool", {}) if isinstance(d.get("pool"), dict) else {}
+        self._smooth("ttft_s", d["mean_ttft_s"]
+                     if d.get("ttft_count", 0) > 0 else None)
+        self._smooth("decode_step_s", d["mean_decode_step_s"]
+                     if d.get("decode_steps", 0) > 0 else None)
+        self._smooth("denials_per_s", pool.get("denials", 0) / dt)
+        self._smooth("tokens_per_s", d.get("tokens_generated", 0) / dt)
+        self._smooth("admitted_per_s", d.get("admitted", 0) / dt)
+        # gauges: tracked un-smoothed (the current truth matters)
+        for g in ("queue_len", "num_running", "pool_utilization",
+                  "pool_used_pages", "pool_quota_pages"):
+            if g in d:
+                self.rates[g] = d[g]
+
+        active = (d.get("admitted", 0) > 0 or d.get("prefills", 0) > 0
+                  or d.get("decode_steps", 0) > 0
+                  or d.get("queue_len", 0) > 0
+                  or d.get("num_running", 0) > 0)
+        if active or self.last_active_t is None:
+            self.last_active_t = now
+        return self.rates
+
+    @property
+    def idle_s(self) -> float:
+        """Seconds of observed inactivity (0 until two observations)."""
+        if self.now is None or self.last_active_t is None:
+            return 0.0
+        return max(self.now - self.last_active_t, 0.0)

@@ -1,0 +1,239 @@
+"""Pluggable scaling policies: windowed signals in, decisions out.
+
+Policies are deliberately dumb-and-pure: each looks at one application's
+:class:`~repro.autoscale.metrics.MetricsWindow` and emits a
+:class:`Decision`; the :class:`~repro.autoscale.controller.\
+AutoscaleController` owns *when* decisions are applied (hysteresis,
+cooldowns) and the handle owns *how* (``scale_up``/``scale_down``/
+``park``).  Three built-ins:
+
+* :class:`TargetTracking` -- the paper's feedback loop: track a TTFT /
+  denial-rate target, growing by the §9.3 solved increment
+  (``handle.sizing.step``) and shrinking when utilization stays low.
+* :class:`IdleParker` -- request parking after a sustained idle window;
+  unparking is demand-driven (``submit_request`` on a parked handle), so
+  no policy ever needs to predict wake-ups.
+* :class:`QuotaRebalancer` -- pod-level: resizes co-tenant ``PoolView``
+  quotas on one shared pool in proportion to windowed demand, so the
+  *provisioned* KV footprint tracks load instead of peak.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.autoscale.metrics import MetricsWindow
+
+#: fallback scale increment when no §9.3 history solution exists yet
+#: (matches the runtime's 64 MiB sizing quantum)
+DEFAULT_STEP_BYTES = 64 << 20
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One policy's verdict for one application this tick."""
+
+    action: str = "none"        # none | scale_up | scale_down | park
+    amount_bytes: int = 0       # for scale_up / scale_down
+    reason: str = ""
+
+    @property
+    def is_action(self) -> bool:
+        return self.action != "none"
+
+
+NONE = Decision()
+
+
+def sizing_step_bytes(handle) -> int:
+    """The §9.3 solved incremental grant for this application -- the
+    increment the paper says runtime growth should use -- else one
+    allocation quantum."""
+    sz = getattr(handle, "sizing", None)
+    if sz is not None and sz.feasible and sz.step > 0:
+        return int(sz.step)
+    return DEFAULT_STEP_BYTES
+
+
+class AppPolicy:
+    """Per-application policy interface."""
+
+    def decide(self, window: MetricsWindow, handle) -> Decision:
+        raise NotImplementedError
+
+
+class TargetTracking(AppPolicy):
+    """Track latency/denial targets; scale by the solved sizing step.
+
+    Scale-up triggers on either windowed denial pressure (the pool said
+    no) or windowed TTFT above target (requests waited).  Scale-down
+    triggers only when the app is demonstrably over-provisioned: zero
+    denial pressure, pool utilization under ``shrink_utilization``, and
+    latency comfortably inside target.
+    """
+
+    def __init__(self, *, ttft_target_s: Optional[float] = None,
+                 denial_target_per_s: float = 0.5,
+                 shrink_utilization: float = 0.25,
+                 max_demand_factor: float = 2.0):
+        self.ttft_target_s = ttft_target_s
+        self.denial_target_per_s = float(denial_target_per_s)
+        self.shrink_utilization = float(shrink_utilization)
+        self.max_demand_factor = float(max_demand_factor)
+
+    def _up_headroom(self, handle) -> int:
+        """Growth is target-tracking, not open-ended: never beyond
+        ``max_demand_factor`` x the app's own demand estimate (an
+        unbounded loop would grow bytes forever on a persistent denial
+        signal the bytes cannot fix)."""
+        cap = int(self.max_demand_factor
+                  * handle.app.capped_demand(handle.app.estimate_demand()))
+        return cap - handle.job.demand_bytes
+
+    def decide(self, w: MetricsWindow, handle) -> Decision:
+        step = sizing_step_bytes(handle)
+        r = w.rates
+        denials = r.get("denials_per_s", 0.0) or 0.0
+        headroom = self._up_headroom(handle)
+        if denials > self.denial_target_per_s and headroom > 0:
+            return Decision("scale_up", min(step, headroom),
+                            f"denials/s {denials:.2f} > "
+                            f"{self.denial_target_per_s:.2f}")
+        ttft = r.get("ttft_s")
+        if (self.ttft_target_s is not None and ttft is not None
+                and ttft > self.ttft_target_s and headroom > 0):
+            return Decision("scale_up", min(step, headroom),
+                            f"ttft {ttft * 1e3:.1f}ms > "
+                            f"{self.ttft_target_s * 1e3:.1f}ms")
+        util = r.get("pool_utilization")
+        ttft_ok = (self.ttft_target_s is None or ttft is None
+                   or ttft <= 0.5 * self.ttft_target_s)
+        # propose shrink only while there is shrinkable headroom --
+        # at the structural floor the decision would be a no-op that
+        # shadows lower-priority policies (the idle parker) forever
+        shrinkable = (handle.job.demand_bytes
+                      - handle.app.structural_floor()) > 0
+        # the denial signal is an EWMA: it decays geometrically and
+        # never reaches exactly zero, so gate the shrink on a fraction
+        # of the target rather than equality
+        denials_quiet = denials <= 0.25 * self.denial_target_per_s
+        if (denials_quiet and util is not None and shrinkable
+                and util < self.shrink_utilization and ttft_ok):
+            return Decision("scale_down", step,
+                            f"utilization {util:.2f} < "
+                            f"{self.shrink_utilization:.2f}")
+        return NONE
+
+
+class IdleParker(AppPolicy):
+    """Park an app after ``idle_s`` with no traffic at all (empty queue,
+    nothing running, no admissions/decodes observed)."""
+
+    def __init__(self, idle_s: float = 60.0):
+        self.idle_s = float(idle_s)
+
+    def decide(self, w: MetricsWindow, handle) -> Decision:
+        if getattr(handle, "parked", False):
+            return NONE
+        if (w.idle_s >= self.idle_s
+                and w.rates.get("queue_len", 0) == 0
+                and w.rates.get("num_running", 0) == 0):
+            return Decision("park",
+                            reason=f"idle {w.idle_s:.1f}s >= "
+                                   f"{self.idle_s:.1f}s")
+        return NONE
+
+
+class QuotaRebalancer:
+    """Demand-weighted fair-share quota resize across one pod's tenants.
+
+    Per tick, each active (non-parked) view's demand is the EWMA of
+    ``used pages + pages denied this window``.  Uncontended, every app
+    gets demand x ``headroom`` (floored at ``min_pages``) -- so idle
+    tenants' provisioned quota collapses toward the floor; contended
+    (wants exceed the pool), the pool is split proportionally.  Shrinks
+    below current usage drain via ``PoolView.resize_quota``'s preemption
+    path, never stranding pages.
+    """
+
+    # 4 pages = 512 tokens: room for one typical request when an app has
+    # no request history yet (shrinking a never-served app to less would
+    # permanently reject its first arrival)
+    def __init__(self, *, min_pages: int = 4, headroom: float = 1.5,
+                 alpha: float = 0.5, floor_quantile: float = 0.9,
+                 floor_requests: int = 2):
+        self.min_pages = int(min_pages)
+        self.headroom = float(headroom)
+        self.alpha = float(alpha)
+        self.floor_quantile = float(floor_quantile)
+        self.floor_requests = int(floor_requests)
+        self._demand: Dict[tuple, float] = {}   # (scope, app) -> EWMA pages
+
+    def _floor_pages(self, shared, app: str) -> int:
+        """An idle tenant's quota floor: enough pages for
+        ``floor_requests`` x a ``floor_quantile`` request from this
+        app's decayed history.  Shrinking below one request turns the
+        next burst's arrivals into permanent admission rejections
+        (``max_pages > quota``), which no later quota raise can undo;
+        keeping a couple of requests' worth lets a burst's head admit
+        immediately instead of waiting one reconcile round."""
+        if shared.history is not None:
+            h = shared.history.get(app, "request", "pages")
+            if h is not None and h.count:
+                return max(self.min_pages,
+                           self.floor_requests
+                           * math.ceil(h.quantile(self.floor_quantile)))
+        return self.min_pages
+
+    def rebalance(self, shared, windows: Dict[str, MetricsWindow], *,
+                  scope: str = "") -> Dict[str, int]:
+        """Resize quotas on ``shared`` for every app with a window.
+        Returns the quotas applied (empty when fewer than two tenants --
+        a lone tenant keeps whatever quota it was configured with).
+        ``scope`` namespaces the demand EWMA: app names are unique only
+        per pod, and one rebalancer instance serves every pod."""
+        demands: Dict[str, float] = {}
+        for app, view in shared.views.items():
+            w = windows.get(app)
+            if w is None or view.parked:
+                continue
+            denied = 0
+            pool_delta = w.window.get("pool")
+            if isinstance(pool_delta, dict):
+                denied = pool_delta.get("denials", 0)
+            d_now = float(view.used + denied)
+            key = (scope, app)
+            prev = self._demand.get(key, d_now)
+            d = self.alpha * d_now + (1.0 - self.alpha) * prev
+            self._demand[key] = d
+            demands[app] = d
+        if len(demands) < 2:
+            return {}
+        floors = {a: self._floor_pages(shared, a) for a in demands}
+        want = {a: max(floors[a], math.ceil(d * self.headroom))
+                for a, d in demands.items()}
+        total_want = sum(want.values())
+        n = shared.num_pages
+        if total_want > n:               # contended: proportional split
+            quotas = {a: max(floors[a], (n * wv) // total_want)
+                      for a, wv in want.items()}
+        else:                            # uncontended: demand + headroom
+            quotas = {a: min(wv, n) for a, wv in want.items()}
+        for app, q in quotas.items():
+            shared.views[app].resize_quota(q)
+        return quotas
+
+
+def default_policies(*, ttft_target_s: Optional[float] = None,
+                     denial_target_per_s: float = 0.5,
+                     idle_park_s: float = 60.0) -> List[AppPolicy]:
+    """The stock per-app policy chain.  The parker runs FIRST: the
+    controller stops at the first active decision, and a large app can
+    emit shrink decisions for many ticks (one sizing step each) -- an
+    app that has crossed the idle threshold must park immediately, not
+    after its bytes have been ground down to the floor."""
+    return [IdleParker(idle_s=idle_park_s),
+            TargetTracking(ttft_target_s=ttft_target_s,
+                           denial_target_per_s=denial_target_per_s)]

@@ -39,6 +39,7 @@ class Job:
     plan: Optional[Plan] = None
     pod: Optional[str] = None
     state: str = "pending"         # pending | running | done | failed
+    peak_bytes: int = 0            # high-water demand (history record)
 
 
 @dataclass
@@ -78,6 +79,7 @@ class PodScheduler:
         self.pod.running[job.job_id] = job
         job.pod = self.pod.name
         job.state = "running"
+        job.peak_bytes = max(job.peak_bytes, job.demand_bytes)
         if job.graph is not None:
             self.placements[job.job_id] = self._place_components(job)
         return True
@@ -105,6 +107,7 @@ class PodScheduler:
             return False
         self.pod.free_bytes -= extra_bytes
         job.demand_bytes += extra_bytes
+        job.peak_bytes = max(job.peak_bytes, job.demand_bytes)
         return True
 
     def scale_down(self, job_id: str, release_bytes: int) -> int:
@@ -191,6 +194,28 @@ class GlobalScheduler:
             return 0
         return self.pods[job.pod].scale_down(job.job_id, release_bytes)
 
+    # -- idle parking (resource-centric reclamation) -------------------------
+    def park(self, job: Job, keep_bytes: int = 0) -> int:
+        """Release an idle job's bytes back to its pod, pre-marking them as
+        the job's low-priority reservation (§5.1.1): other work may take the
+        space, but while it stays free the parked job reacquires it on
+        unpark without re-placement.  Freed capacity drains the pending
+        queue.  Returns the bytes actually freed."""
+        if job.pod is None:
+            return 0
+        freed = self.scale_down(job, max(job.demand_bytes - keep_bytes, 0))
+        if freed:
+            pod, mark = self.reservations.get(job.job_id, (job.pod, 0))
+            self.pods[pod].pod.reserved_bytes += freed
+            self.reservations[job.job_id] = (pod, mark + freed)
+            self._drain_pending()
+        return freed
+
+    def unpark(self, job: Job, reacquire_bytes: int) -> bool:
+        """Reacquire a parked job's bytes (consumes the park reservation).
+        False when co-tenants took the space in the meantime."""
+        return self.scale_up(job, reacquire_bytes)
+
     def cancel(self, job: Job) -> bool:
         """Drop a still-pending job from the queue."""
         if job in self.pending:
@@ -213,7 +238,15 @@ class GlobalScheduler:
         job.state = "done"
         self.completed.append(job)
         if self.history is not None:
-            self.history.observe(job.app, "job", "bytes", job.demand_bytes)
+            # record the high-water working footprint, not the residual
+            # demand: a parked (or scaled-down) job finishing with ~0
+            # bytes would otherwise poison history-driven sizing for the
+            # app's next submission
+            self.history.observe(job.app, "job", "bytes",
+                                 max(job.peak_bytes, job.demand_bytes))
+        self._drain_pending()
+
+    def _drain_pending(self) -> None:
         # drain pending queue: iterate a snapshot -- submit() re-appends
         # unplaceable jobs to self.pending, which must not be the list
         # being iterated (it would loop forever on the first failure)

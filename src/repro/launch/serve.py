@@ -36,6 +36,10 @@ def main():
                     help="opt out of the pod-shared page pool")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="drive the repro.autoscale control plane: two "
+                         "bursts with an idle gap; the app is parked "
+                         "between them and transparently unparked")
     args = ap.parse_args()
     if args.backend != "dense" and not args.reduced:
         ap.error("--backend needs --reduced: the default arm serves through "
@@ -78,11 +82,35 @@ def main():
           f"demand={handle.job.demand_bytes / 2**30:.2f} GiB")
 
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        handle.submit_request(Request(f"r{i}",
-                                      int(rng.integers(*prompt_rng)),
-                                      int(rng.integers(16, max_new + 1))))
-    stats = handle.run(max_steps=1_000_000)
+    if args.autoscale:
+        cluster.enable_autoscale(idle_park_s=3.0, confirm_ticks=1)
+        half = max(args.requests // 2, 1)
+        for i in range(half):
+            handle.submit_request(Request(f"r{i}",
+                                          int(rng.integers(*prompt_rng)),
+                                          int(rng.integers(16, max_new + 1))))
+        handle.run(max_steps=1_000_000)
+        for t in range(6):              # idle ticks: the parker fires
+            cluster.tick(now=float(t))
+        parks = [a for a in cluster.autoscaler.log if a["action"] == "park"]
+        if parks:
+            print(f"[autoscale] parked after idle: "
+                  f"freed_pages={parks[-1]['freed_pages']} "
+                  f"freed_bytes={parks[-1]['freed_bytes']}")
+        print(f"[autoscale] parked={handle.parked} "
+              f"pod_free={cluster.capacity()[handle.pod]['free_bytes']}")
+        for i in range(half, args.requests):   # burst 2: transparent unpark
+            handle.submit_request(Request(f"r{i}",
+                                          int(rng.integers(*prompt_rng)),
+                                          int(rng.integers(16, max_new + 1))))
+        print(f"[autoscale] unparked on submit: parked={handle.parked}")
+        stats = handle.run(max_steps=1_000_000)
+    else:
+        for i in range(args.requests):
+            handle.submit_request(Request(f"r{i}",
+                                          int(rng.integers(*prompt_rng)),
+                                          int(rng.integers(16, max_new + 1))))
+        stats = handle.run(max_steps=1_000_000)
     pool = handle.engine.pool
     print(f"[done] completed={stats['completed']} "
           f"tokens={stats['tokens_generated']} "

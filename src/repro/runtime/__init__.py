@@ -23,3 +23,7 @@ __all__ = [
     "Executor", "JaxExecutor", "NullExecutor",
     "REDUCED_SHAPES", "measure_cluster_throughput", "replay_trace",
 ]
+
+# the autoscale control plane lives in repro.autoscale (imported lazily
+# by Cluster.enable_autoscale / AppHandle.park to keep simulation-only
+# paths import-light)

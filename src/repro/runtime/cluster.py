@@ -6,6 +6,9 @@ The lifecycle (paper §4-§5, TPU-adapted)::
     handle  = cluster.submit(app)     # size -> place -> materialize -> bind
     handle.run(steps)                 # execute (train loop / serving engine)
     handle.scale_up(bytes)            # runtime data-component growth
+    handle.park()                     # idle reclamation (KV -> host,
+                                      #   pages + bytes released)
+    cluster.tick()                    # autoscale reconcile round
     handle.release()                  # free placement, restore capacity
 
 ``submit`` performs the platform's side of the resource-centric contract:
@@ -82,21 +85,37 @@ class AppHandle:
         """The serving backend (ModelRunner) bound to this application."""
         return self.exec_state.get("runner")
 
-    def serving_stats(self) -> Dict:
+    def serving_stats(self, since: Optional[Dict] = None) -> Dict:
         """Denial / preemption / latency signals for autoscaling policies.
 
         Combines the engine's request stats (TTFT, decode-step latency,
         preemptions) with the page pool's grant/denial counters; when the
         app serves from a pod-shared pool, the pod-level utilization and
         per-app denial/preemption tallies ride along so a policy can see
-        WHO is starving whom."""
+        WHO is starving whom.
+
+        ``since``: a RAW snapshot previously returned by
+        ``serving_stats()`` (no ``since=``).  Counters (engine, pool,
+        per-app tallies) then come back as the *delta* accumulated since
+        that snapshot -- the windowed semantics the autoscale policies
+        consume -- while gauges (queue depth, utilization, pool sizes)
+        always reflect now.  Windowed results are tagged
+        ``windowed=True`` and refused as markers: deltas of deltas
+        would silently produce lifetime-minus-window garbage."""
         eng = self.engine
         if eng is None:
             return {}
         out = eng.stats.as_dict()
-        out["pool"] = dict(eng.pool.stats)
-        out["pool_utilization"] = eng.pool.utilization
-        shared = getattr(eng.pool, "shared", None)
+        out["queue_len"] = len(eng.queue)
+        out["num_running"] = len(eng.running)
+        out["parked"] = self.parked
+        pool = eng.pool
+        out["pool"] = dict(pool.stats)
+        out["pool_utilization"] = pool.utilization
+        out["pool_quota_pages"] = pool.num_pages
+        out["pool_used_pages"] = getattr(
+            pool, "used", pool.num_pages - len(pool.free))
+        shared = getattr(pool, "shared", None)
         if shared is not None:
             out["shared_pool"] = {
                 "num_pages": shared.num_pages,
@@ -107,6 +126,15 @@ class AppHandle:
                 "cross_app_preemptions":
                     shared.stats["cross_app_preemptions"],
             }
+        out["windowed"] = False
+        if since is not None:
+            if since.get("windowed"):
+                raise ValueError(
+                    "serving_stats(since=...) needs a RAW snapshot, not "
+                    "a windowed result: deltas of deltas are garbage")
+            from repro.autoscale.metrics import stats_delta
+            out = stats_delta(out, since)
+            out["windowed"] = True
         return out
 
     def _ensure_bound(self) -> None:
@@ -121,8 +149,13 @@ class AppHandle:
 
     # -- execution ----------------------------------------------------------
     def step(self) -> Dict:
-        """One unit of progress: a train step or one engine iteration."""
+        """One unit of progress: a train step or one engine iteration.
+        A parked serve app makes no progress (park drained it); submit a
+        request or call ``unpark()`` to resume."""
         self._ensure_bound()
+        if self.app.kind == "serve" and self.parked:
+            return {"alive": False, "stats": self.engine.stats,
+                    "parked": True}
         if self.app.kind == "train":
             t0 = time.time()
             m = self.cluster.executor.train_step(self)
@@ -154,11 +187,18 @@ class AppHandle:
                     "loss_first": losses[0] if losses else None,
                     "loss_last": losses[-1] if losses else None,
                     "straggled": len(self.watchdog.flags)}
+        if self.parked:
+            self.unpark()
         stats = self.engine.run_to_completion(max_steps=max_steps)
         return stats.as_dict()
 
     def submit_request(self, req: Request) -> None:
+        """Enqueue one serving request; a parked application is
+        transparently unparked first (the paper's warm restart: the
+        request lands on a live engine with its KV state restored)."""
         self._ensure_bound()
+        if self.parked:
+            self.unpark()
         self.engine.submit(req)
 
     # -- runtime scaling (paper §5.1.2) -------------------------------------
@@ -168,6 +208,24 @@ class AppHandle:
 
     def scale_down(self, release_bytes: int) -> int:
         return self.cluster.scheduler.scale_down(self.job, int(release_bytes))
+
+    # -- idle parking (repro.autoscale) --------------------------------------
+    @property
+    def parked(self) -> bool:
+        return self.exec_state.get("parked") is not None
+
+    def park(self) -> Dict:
+        """Reclaim this idle serve app's resources: KV drained to host
+        (checkpointer array format), pool pages and scheduler bytes
+        released.  Returns the reclamation receipt."""
+        from repro.autoscale.parking import park_app
+        return park_app(self)
+
+    def unpark(self) -> Dict:
+        """Warm restart from a parked snapshot (also triggered
+        implicitly by ``submit_request``/``run``)."""
+        from repro.autoscale.parking import unpark_app
+        return unpark_app(self)
 
     # -- materialization feedback / recovery --------------------------------
     def _rebind(self) -> None:
@@ -228,6 +286,9 @@ class Cluster:
         # ``pool_pages`` when given, else by the first tenant's request
         self.pool_pages = pool_pages
         self._pod_pools: Dict[str, "SharedPagePool"] = {}
+        # the autoscale control plane (repro.autoscale); opt-in via
+        # enable_autoscale(), driven by tick()
+        self.autoscaler = None
 
     def pod_pool(self, pod: str, *, default_pages: int = 256
                  ) -> "SharedPagePool":
@@ -241,6 +302,35 @@ class Cluster:
                                 history=self.history)
             self._pod_pools[pod] = sp
         return sp
+
+    # -- the control plane (repro.autoscale) ---------------------------------
+    def enable_autoscale(self, *, ttft_target_s: Optional[float] = None,
+                         denial_target_per_s: float = 0.5,
+                         idle_park_s: float = 60.0, **controller_kw):
+        """Turn on the autoscale control plane.  Every serve application
+        (already running or submitted later) is attached with the stock
+        policy chain -- target tracking on TTFT/denial-rate, idle
+        parking, and pod-level quota rebalancing -- unless
+        ``make_policies`` overrides it.  Drive it with ``tick()``."""
+        from repro.autoscale.controller import AutoscaleController
+        from repro.autoscale.policy import default_policies
+        if "make_policies" not in controller_kw:
+            controller_kw["make_policies"] = lambda: default_policies(
+                ttft_target_s=ttft_target_s,
+                denial_target_per_s=denial_target_per_s,
+                idle_park_s=idle_park_s)
+        self.autoscaler = AutoscaleController(self, **controller_kw)
+        for h in self.handles.values():
+            self.autoscaler.attach(h)
+        return self.autoscaler
+
+    def tick(self, now: Optional[float] = None) -> List[Dict]:
+        """One control-plane reconcile round (no-op until
+        ``enable_autoscale``).  ``now`` is injectable for event-driven
+        replay; defaults to the wall clock."""
+        if self.autoscaler is None:
+            return []
+        return self.autoscaler.tick(now)
 
     # -- sizing (paper §9.3) -------------------------------------------------
     def size(self, app: Application) -> Tuple[int, Optional[SizingSolution]]:
@@ -280,9 +370,13 @@ class Cluster:
                     self.scheduler.finish(job)
                     raise
         self.handles[job.job_id] = handle
+        if self.autoscaler is not None:
+            self.autoscaler.attach(handle)
         return handle
 
     def release(self, handle: AppHandle) -> None:
+        if self.autoscaler is not None:
+            self.autoscaler.detach(handle)
         if handle.job.state == "pending":
             self.scheduler.cancel(handle.job)
         elif handle.job.state == "running":

@@ -45,6 +45,12 @@ class EngineStats:
     ttft_count: int = 0
     decode_s_sum: float = 0.0          # summed decode-step wall time
 
+    # every field except wall_s is a monotonic counter; wall_s is a gauge
+    # (overwritten per run_to_completion), so deltas exclude it
+    COUNTERS = ("admitted", "completed", "rejected", "preempted",
+                "decode_steps", "prefills", "tokens_generated",
+                "ttft_s_sum", "ttft_count", "decode_s_sum")
+
     @property
     def mean_ttft_s(self) -> float:
         return self.ttft_s_sum / max(self.ttft_count, 1)
@@ -58,6 +64,28 @@ class EngineStats:
         d["mean_ttft_s"] = self.mean_ttft_s
         d["mean_decode_step_s"] = self.mean_decode_step_s
         return d
+
+    # -- windowed semantics (autoscaling policies consume rates, not
+    # lifetime totals) -------------------------------------------------------
+    def snapshot(self) -> "EngineStats":
+        """A marker for later ``delta(since=...)`` calls."""
+        return dataclasses.replace(self)
+
+    def delta(self, since: "EngineStats") -> "EngineStats":
+        """Counters accumulated SINCE a snapshot: the per-window view
+        (mean_ttft_s etc. then reflect only that window)."""
+        out = dataclasses.replace(self)
+        for f in self.COUNTERS:
+            setattr(out, f, getattr(self, f) - getattr(since, f))
+        return out
+
+    def reset(self) -> "EngineStats":
+        """Zero the counters in place, returning the pre-reset snapshot
+        (the alternative windowing style: one window per reset)."""
+        snap = self.snapshot()
+        for f in self.COUNTERS:
+            setattr(self, f, type(getattr(self, f))(0))
+        return snap
 
 
 class ServingEngine:
@@ -121,6 +149,19 @@ class ServingEngine:
             return False
         self.preempt(min(self.running, key=lambda r: r.generated))
         return True
+
+    def drain(self) -> List[Tuple[Request, List[int]]]:
+        """Park support: reclaim every running request's pages without
+        completing it.  Returns (request, held page ids) in running order
+        -- the order matters, because unpark must rebuild ``running`` in
+        the same order for batch-identical decoding.  The page *contents*
+        are untouched; the caller (``repro.autoscale.parking``) snapshots
+        them to host before the ids are re-allocated."""
+        drained = []
+        for req in list(self.running):
+            drained.append((req, self.pool.reclaim(req)))
+        self.running.clear()
+        return drained
 
     def _reclaim(self) -> bool:
         """Free pages under pressure.  A shared-pool view arbitrates across

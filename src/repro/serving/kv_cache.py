@@ -33,7 +33,7 @@ class Request:
     max_new_tokens: int
     generated: int = 0
     pages: List[int] = field(default_factory=list)
-    state: str = "queued"     # queued | running | done | preempted | rejected
+    state: str = "queued"     # queued|running|done|preempted|rejected|parked
     submitted_at: float = 0.0       # engine-stamped (perf_counter)
     first_token_at: Optional[float] = None
 
@@ -158,6 +158,28 @@ class PagePool:
                                  max(len(req.pages), 1))
         req.pages = []
         req.state = "done"
+
+    # -- park/unpark (idle reclamation; repro.autoscale.parking) -------------
+    def reclaim(self, req: Request) -> List[int]:
+        """Return a request's pages WITHOUT completing it: no history
+        sample (the request resumes with the same footprint) and no
+        'released' count.  Returns the page ids it held, so the drained
+        KV can be restored into freshly granted pages on unpark."""
+        held, req.pages = req.pages, []
+        self._dealloc(held)
+        req.state = "parked"
+        return held
+
+    def regrant(self, req: Request, n: int) -> bool:
+        """Unpark: re-grant exactly the drained page count (the sizing
+        policy already spoke when the pages were first granted)."""
+        got = self._alloc(n)
+        if got is None:
+            self.stats["denials"] += 1
+            return False
+        req.pages = got
+        req.state = "running"
+        return True
 
     @property
     def physical_pages(self) -> int:

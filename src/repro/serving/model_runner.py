@@ -29,12 +29,13 @@ outputs nondeterministic across runs.
 from __future__ import annotations
 
 import zlib
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.checkpointer import _from_saved, _to_savable
 from repro.configs.base import ATTN_GLOBAL, ModelConfig
 from repro.kernels import ops
 from repro.kernels.paged_attention import paged_attention_ref
@@ -71,6 +72,45 @@ class ModelRunner:
 
     def decode(self, running: List[Request]) -> None:
         raise NotImplementedError
+
+    # -- idle parking (repro.autoscale.parking) ------------------------------
+    @staticmethod
+    def _tree_to_host(tree) -> Tuple[list, Any]:
+        """Checkpointer array format (bf16 stored as uint16 + logical
+        dtype) for a whole pytree; the device copies become collectable."""
+        leaves, treedef = jax.tree.flatten(tree)
+        return ([_to_savable(np.asarray(jax.device_get(x)))
+                 for x in leaves], treedef)
+
+    @staticmethod
+    def _tree_from_host(saved: Tuple[list, Any]):
+        leaves, treedef = saved
+        return jax.tree.unflatten(
+            treedef, [jnp.asarray(_from_saved(a, d)) for a, d in leaves])
+
+    def park(self, drained: List[Tuple[Request, List[int]]]) -> Dict:
+        """Snapshot decode state AND params to host (checkpointer array
+        format) and DROP the device copies, so a parked app's HBM is
+        actually reclaimable -- the scheduler hands back 100% of the
+        job's bytes, which must not leave weights silently resident.
+        ``drained`` is the engine's ``drain()`` output: (request, page
+        ids it held), with the page contents still intact on device."""
+        state = {"generated": {k: list(v)
+                               for k, v in self.generated.items()}}
+        if getattr(self, "params", None) is not None:
+            state["params"] = self._tree_to_host(self.params)
+            self.params = None
+        return state
+
+    def unpark(self, state: Dict, restored: List[Request]) -> None:
+        """Rebuild device state from a ``park`` snapshot.  ``restored``
+        are the drained requests that re-acquired pages (their
+        ``req.pages`` are fresh ids); requests that could not be
+        re-granted are re-queued by the caller and re-prefill from
+        scratch."""
+        if "params" in state:
+            self.params = self._tree_from_host(state["params"])
+        self.generated = {k: list(v) for k, v in state["generated"].items()}
 
 
 class DenseRunner(ModelRunner):
@@ -132,6 +172,20 @@ class DenseRunner(ModelRunner):
             if req.generated + 1 >= req.max_new_tokens:
                 self.slots.pop(req.req_id, None)
 
+    def park(self, drained):
+        """The dense cache is one contiguous tree: snapshot every leaf to
+        host and drop the device copy."""
+        state = super().park(drained)
+        state["cache"] = self._tree_to_host(self.cache)
+        state["slots"] = dict(self.slots)
+        self.cache = None
+        return state
+
+    def unpark(self, state, restored):
+        super().unpark(state, restored)
+        self.cache = self._tree_from_host(state["cache"])
+        self.slots = dict(state["slots"])
+
 
 class PagedRunner(ModelRunner):
     """KV in pool pages; decode through the paged-attention kernel.
@@ -164,7 +218,10 @@ class PagedRunner(ModelRunner):
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
         self._prefill = jax.jit(self.model.prefill, static_argnums=2)
         nb, pat = cfg.num_blocks, len(cfg.pattern)
-        shape = (pool_pages, PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
+        self.num_layers = nb * pat
+        self.page_shape = (pool_pages, PAGE_SIZE, cfg.num_kv_heads,
+                           cfg.head_dim)
+        shape = self.page_shape
         self.k_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
         self.v_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
         # the Pallas kernel natively on TPU; its jnp oracle elsewhere (the
@@ -253,6 +310,40 @@ class PagedRunner(ModelRunner):
         nxt = np.asarray(nxt)
         for b, req in enumerate(running):
             self.generated[req.req_id].append(int(nxt[b]))
+
+    def park(self, drained):
+        """Gather each drained request's KV pages to host (one
+        (layers, n_pages, PAGE, KV, hd) array per request, page ids
+        dropped -- unpark scatters into whatever fresh ids are granted)
+        and free the pool-sized device arrays, the bulk of a serve app's
+        HBM footprint."""
+        state = super().park(drained)
+        kv = {}
+        for req, page_ids in drained:
+            idx = jnp.asarray(page_ids, jnp.int32)
+            k = np.stack([np.asarray(kp[idx]) for kp in self.k_pages])
+            v = np.stack([np.asarray(vp[idx]) for vp in self.v_pages])
+            kv[req.req_id] = (_to_savable(k), _to_savable(v))
+        state["kv"] = kv
+        self.k_pages = None
+        self.v_pages = None
+        return state
+
+    def unpark(self, state, restored):
+        super().unpark(state, restored)
+        self.k_pages = [jnp.zeros(self.page_shape, KV_DTYPE)
+                        for _ in range(self.num_layers)]
+        self.v_pages = [jnp.zeros(self.page_shape, KV_DTYPE)
+                        for _ in range(self.num_layers)]
+        for req in restored:
+            (ka, kd), (va, vd) = state["kv"][req.req_id]
+            k = jnp.asarray(_from_saved(ka, kd))     # (L, n, PAGE, KV, hd)
+            v = jnp.asarray(_from_saved(va, vd))
+            pages = jnp.asarray(req.pages, jnp.int32)
+            for layer in range(self.num_layers):
+                self.k_pages[layer], self.v_pages[layer] = self._scatter(
+                    self.k_pages[layer], self.v_pages[layer], pages,
+                    k[layer], v[layer])
 
 
 def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,

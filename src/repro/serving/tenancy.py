@@ -85,7 +85,12 @@ class SharedPagePool:
         return 1.0 - len(self.free) / max(self.num_pages, 1)
 
     def fair_share(self, view: "PoolView") -> float:
-        total = sum(v.weight for v in self.views.values()) or 1.0
+        """Parked views drop out of the share computation: a parked app
+        holds no pages and must not dilute active tenants' shares."""
+        if view.parked:
+            return 0.0
+        total = sum(v.weight for v in self.views.values()
+                    if not v.parked) or 1.0
         return self.num_pages * view.weight / total
 
     # -- cross-app preemption (the tenancy policy) --------------------------
@@ -94,7 +99,7 @@ class SharedPagePool:
         running request to give back."""
         best, best_over = None, None
         for v in self.views.values():
-            if v.engine is None or not v.engine.running:
+            if v.parked or v.engine is None or not v.engine.running:
                 continue
             over = v.used - self.fair_share(v)
             if best_over is None or over > best_over:
@@ -137,6 +142,7 @@ class PoolView(PagePool):
         self._quota = quota
         self.used = 0
         self.engine = None              # set by ServingEngine.attach
+        self.parked = False             # set by repro.autoscale.parking
         self.free = []                  # unused: physical list is shared
         self._denial_cause = "physical"
 
@@ -152,6 +158,22 @@ class PoolView(PagePool):
 
     def _page_cap(self) -> int:
         return min(self.quota, self.shared.num_pages)
+
+    def resize_quota(self, quota: Union[int, str, None]) -> int:
+        """Runtime quota change (the autoscale rebalancer's lever).
+
+        Shrinking below current usage drains the overage through the
+        engine's normal preemption path -- preempted requests release
+        their pages to the shared pool and re-queue (at-least-once), so
+        pages are never stranded on an over-quota view.  Returns the
+        number of requests preempted by the shrink."""
+        self._quota = quota
+        preempted = 0
+        while self.used > self.quota:
+            if self.engine is None or not self.engine.preempt_newest():
+                break          # no running request left to give back
+            preempted += 1
+        return preempted
 
     def admissible(self, req) -> bool:
         ok = super().admissible(req)
