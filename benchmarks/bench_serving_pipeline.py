@@ -13,6 +13,13 @@ Applications co-located on one pod via ``Cluster.submit()``.  Compare:
   * private -- each app brings pool_pages/3 of its own (per-function
     peak provisioning of the pool itself).
 
+Part 3 (fig_swa): a sliding-window tenant (reduced gemma3, 5 local : 1
+global) serving long generations through the paged backend on the
+pod-shared pool.  Compare ring page accounting (local layers hold a
+fixed ``ceil(window/PAGE_SIZE)+1``-page ring) against the no-ring arm
+(local layers charged like global growing tables).  Emitted as its own
+``BENCH_serving_swa.json`` artifact.
+
 Derived: completion wall time, pool utilization, denial/preempt counts.
 """
 
@@ -21,9 +28,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_json, row
+from benchmarks.common import emit_json, row, rows_mark
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, NullExecutor
+from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
 
@@ -95,6 +102,38 @@ def run_tenancy(shared: bool, n_per_app: int = 32, pool_pages: int = 192,
     return wall, stats, peak_util
 
 
+def run_swa(rings: bool, *, n: int = 4, prompt: int = 96, gen: int = 280,
+            pool_pages: int = 64, max_steps: int = 5_000):
+    """One sliding-window tenant on the pod-shared pool, paged backend.
+
+    ``rings=False`` is the baseline arm: local-attention layers are
+    charged growing page tables like global ones (decode stays windowed
+    and token-identical -- only the page accounting differs)."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=pool_pages)
+    h = cluster.submit(Application.serve(
+        "gemma3-12b", reduced=True, name="swa-tenant", max_batch=4,
+        backend="paged", swa_rings=rings, policy="fixed"))
+    for i in range(n):
+        h.submit_request(Request(f"swa-r{i}", prompt, gen))
+    pool = h.engine.pool
+    t0 = time.perf_counter()
+    peak_util = util_sum = 0.0
+    peak_local = steps = 0
+    while h.step()["alive"] and steps < max_steps:
+        u = pool.utilization
+        peak_util = max(peak_util, u)
+        util_sum += u
+        peak_local = max(peak_local, getattr(pool, "used_local", 0))
+        steps += 1
+    wall = (time.perf_counter() - t0) * 1e6
+    stats = h.serving_stats()
+    traces = h.runner.decode_traces
+    h.release()
+    return (wall, stats, peak_util, util_sum / max(steps, 1), traces,
+            peak_local)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64,
@@ -127,6 +166,24 @@ def main() -> None:
             f"completed={done};peak_util={util:.2f};preempt={preempt};"
             f"denials={denials};{per_app}")
     emit_json("serving_pipeline", extra={"smoke": args.smoke})
+
+    # Part 3: sliding-window ring pages on the pod-shared pool, emitted
+    # as its own artifact (BENCH_serving_swa.json)
+    # generation must outgrow the ring space (ring_pages * PAGE_SIZE =
+    # 256 tokens at the reduced window) for the ring's bounded footprint
+    # to show: total length 96 + gen spans 4-5 global pages
+    mark = rows_mark()
+    gen = 300 if args.smoke else 420
+    for rings in (True, False):
+        wall, stats, peak, mean, traces, peak_local = run_swa(
+            rings, n=4, gen=gen)
+        name = "ring" if rings else "no_ring"
+        row(f"fig_swa/{name}", wall / max(stats["decode_steps"], 1),
+            f"completed={stats['completed']};peak_util={peak:.3f};"
+            f"mean_util={mean:.3f};peak_local_pages={peak_local};"
+            f"decode_compiles={traces}")
+    emit_json("serving_swa", extra={"smoke": args.smoke, "gen": gen},
+              rows_from=mark)
 
 
 if __name__ == "__main__":

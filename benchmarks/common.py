@@ -32,12 +32,19 @@ def row(name: str, us_per_call: float, derived: str = "") -> None:
                   "derived": derived})
 
 
+def rows_mark() -> int:
+    """Position marker into the row buffer: pass it to ``emit_json`` as
+    ``rows_from`` so one driver script can emit several artifacts, each
+    holding only its own scenario's rows."""
+    return len(_ROWS)
+
+
 def emit_json(bench: str, extra: Optional[Dict] = None,
-              out_dir: Optional[str] = None) -> str:
-    """Write every ``row()`` so far to ``BENCH_<bench>.json``.  Returns
-    the path.  ``derived`` strings stay verbatim (they are already
-    ``k=v;k=v`` records); ``extra`` carries bench-level context such as
-    parameters or environment."""
+              out_dir: Optional[str] = None, rows_from: int = 0) -> str:
+    """Write every ``row()`` since ``rows_from`` (a ``rows_mark()``) to
+    ``BENCH_<bench>.json``.  Returns the path.  ``derived`` strings stay
+    verbatim (they are already ``k=v;k=v`` records); ``extra`` carries
+    bench-level context such as parameters or environment."""
     out_dir = out_dir or os.environ.get("BENCH_ARTIFACT_DIR",
                                         "artifacts/bench")
     os.makedirs(out_dir, exist_ok=True)
@@ -45,7 +52,7 @@ def emit_json(bench: str, extra: Optional[Dict] = None,
         "bench": bench,
         "argv": sys.argv[1:],
         "unix_time": int(time.time()),
-        "rows": list(_ROWS),
+        "rows": list(_ROWS[rows_from:]),
         "extra": extra or {},
     }
     path = os.path.join(out_dir, f"BENCH_{bench}.json")

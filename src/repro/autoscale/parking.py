@@ -43,7 +43,8 @@ class ParkedRequest:
     """One drained in-flight request: enough to re-grant and restore."""
 
     req: Request
-    num_pages: int
+    num_pages: int                  # growing-table (global-group) pages
+    num_local_pages: int = 0        # sliding-window ring pages
 
 
 @dataclass
@@ -80,10 +81,11 @@ def park_app(handle) -> Dict:
     view = eng.pool
     if hasattr(view, "parked"):
         view.parked = True
-    freed_pages = sum(len(pages) for _, pages in drained)
+    freed_pages = sum(len(g) + len(l) for _, (g, l) in drained)
     freed_bytes = handle.cluster.scheduler.park(handle.job)
     handle.exec_state["parked"] = ParkedApp(
-        requests=[ParkedRequest(req, len(pages)) for req, pages in drained],
+        requests=[ParkedRequest(req, len(g), len(l))
+                  for req, (g, l) in drained],
         runner_state=runner_state, freed_bytes=freed_bytes,
         freed_pages=freed_pages, parked_at=time.monotonic())
     return {"freed_bytes": freed_bytes, "freed_pages": freed_pages,
@@ -112,11 +114,11 @@ def unpark_app(handle) -> Dict:
     restored: List[ParkedRequest] = []
     requeued: List[ParkedRequest] = []
     for pr in parked.requests:
-        ok = eng.pool.regrant(pr.req, pr.num_pages)
+        ok = eng.pool.regrant(pr.req, pr.num_pages, pr.num_local_pages)
         while not ok:
             if not eng._reclaim():
                 break
-            ok = eng.pool.regrant(pr.req, pr.num_pages)
+            ok = eng.pool.regrant(pr.req, pr.num_pages, pr.num_local_pages)
         (restored if ok else requeued).append(pr)
     runner = handle.runner
     if runner is not None:

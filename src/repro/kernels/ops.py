@@ -91,6 +91,8 @@ def rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 128):
                         interpret=_interpret())
 
 
-def paged_attention(q, k_pages, v_pages, page_table, valid_len):
+def paged_attention(q, k_pages, v_pages, page_table, valid_len, *,
+                    window: int = 0, ring: bool = False):
     return _paged.paged_attention(q, k_pages, v_pages, page_table, valid_len,
+                                  window=window, ring=ring,
                                   interpret=_interpret())

@@ -9,6 +9,15 @@ whole pool).  Grid: (batch, kv_heads, max_pages) with the page dimension
 sequential; online-softmax state for the grouped queries lives in VMEM
 scratch.  Out-of-range pages (table entry < 0) are skipped via pl.when --
 requests shorter than max_pages cost only their own pages' DMAs.
+
+Sliding-window (ATTN_LOCAL) layers run the same kernel with
+``window > 0``: only keys at positions ``(pos - window, pos]`` score.
+With ``ring=True`` the page table is a fixed *ring* of
+``ceil(window/PAGE_SIZE)+1`` pages -- token position ``p`` lives at ring
+slot ``p % (max_pages * page_size)``, so a slot's absolute position is
+recovered as the latest ``p' <= pos`` congruent to the slot index
+(modulo the ring size), exactly mirroring the dense ring cache in
+``models/attention.self_attention_decode``.
 """
 
 from __future__ import annotations
@@ -24,8 +33,29 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _slot_positions(slot, last, *, window: int, ring: bool, ring_tokens: int):
+    """(abs position, valid?) of ring/linear cache slots given the last
+    written position ``last`` (= valid_len - 1).
+
+    Linear tables store position ``s`` at slot ``s``.  Ring tables store
+    position ``p`` at slot ``p % ring_tokens``; the slot's current
+    occupant is the LATEST ``p' <= last`` congruent to the slot index,
+    i.e. ``last - ((last - s) % ring_tokens)`` (negative -> never
+    written).  ``window > 0`` additionally masks positions at or below
+    ``last - window``."""
+    if ring:
+        pos = last - jnp.remainder(last - slot, ring_tokens)
+    else:
+        pos = slot
+    ok = (pos >= 0) & (pos <= last)
+    if window > 0:
+        ok = ok & (pos > last - window)
+    return pos, ok
+
+
 def _paged_kernel(table_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, page_size: int, scale: float):
+                  m_scr, l_scr, acc_scr, *, page_size: int, scale: float,
+                  window: int, ring: bool):
     b, h, pi = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     np_ = pl.num_programs(2)
 
@@ -38,19 +68,24 @@ def _paged_kernel(table_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
     page_id = table_ref[b, pi]
     valid_len = len_ref[b]
     s_start = pi * page_size
+    # a ring page can hold live tokens regardless of its table index, so
+    # the start-beyond-length early-exit only applies to linear tables
+    live = (page_id >= 0) if ring else (page_id >= 0) & (s_start < valid_len)
 
-    @pl.when((page_id >= 0) & (s_start < valid_len))
+    @pl.when(live)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)          # (G, d)
         k = k_ref[0, 0].astype(jnp.float32)          # (page, d)
         v = v_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < valid_len, s, NEG_INF)
+        slot = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _, ok = _slot_positions(slot, valid_len - 1, window=window,
+                                ring=ring, ring_tokens=np_ * page_size)
+        s = jnp.where(ok, s, NEG_INF)
         m_prev, l_prev = m_scr[...], l_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.where(pos < valid_len, jnp.exp(s - m_new), 0.0)
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
@@ -66,9 +101,14 @@ def _paged_kernel(table_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, valid_len: jax.Array, *,
+                    window: int = 0, ring: bool = False,
                     interpret: bool = True) -> jax.Array:
     """q: (B, H, D); k/v_pages: (P, page, KV, D) pool; page_table:
     (B, max_pages) int32 (-1 padded); valid_len: (B,) total tokens.
+
+    ``window > 0`` masks keys outside the last ``window`` positions;
+    ``ring=True`` additionally treats the table as a position-modular
+    ring of ``max_pages`` pages (sliding-window layers' bounded tables).
 
     Returns (B, H, D)."""
     b, h, d = q.shape
@@ -104,7 +144,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page_size=page,
-                          scale=d ** -0.5),
+                          scale=d ** -0.5, window=window, ring=ring),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         interpret=interpret,
@@ -112,8 +152,10 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out.reshape(b, h, d)
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_table, valid_len):
-    """Gather-based jnp oracle."""
+def paged_attention_ref(q, k_pages, v_pages, page_table, valid_len, *,
+                        window: int = 0, ring: bool = False):
+    """Gather-based jnp oracle (same window/ring semantics as the
+    kernel)."""
     b, h, d = q.shape
     pool, page, kvh, _ = k_pages.shape
     max_pages = page_table.shape[1]
@@ -127,10 +169,13 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, valid_len):
     scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * (d ** -0.5)
     vlen = jnp.broadcast_to(jnp.asarray(valid_len), (b,))
-    pos = jnp.arange(max_pages * page)[None, None, :]
+    slot = jnp.arange(max_pages * page)[None, None, :]
     in_page = (jnp.repeat(page_table >= 0, page, axis=1))[:, None, :]
-    mask = (pos < vlen[:, None, None]) & in_page
+    _, ok = _slot_positions(slot, vlen[:, None, None] - 1, window=window,
+                            ring=ring, ring_tokens=max_pages * page)
+    mask = ok & in_page
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)   # fully-masked rows stay finite
     return jnp.einsum("bhs,bshd->bhd", probs,
                       v.astype(jnp.float32)).astype(q.dtype)

@@ -34,6 +34,10 @@ def main():
                          "decode via the paged-attention kernel)")
     ap.add_argument("--private-pool", action="store_true",
                     help="opt out of the pod-shared page pool")
+    ap.add_argument("--no-swa-rings", action="store_true",
+                    help="paged backend: charge sliding-window layers "
+                         "growing page tables instead of bounded rings "
+                         "(accounting baseline; tokens are identical)")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
     ap.add_argument("--autoscale", action="store_true",
@@ -55,6 +59,7 @@ def main():
                                 max_batch=min(args.max_batch, 4),
                                 pool_pages=128, policy=args.policy,
                                 backend=args.backend,
+                                swa_rings=not args.no_swa_rings,
                                 private_pool=args.private_pool)
         prompt_rng = (8, 64)
         max_new = 16

@@ -115,6 +115,12 @@ class AppHandle:
         out["pool_quota_pages"] = pool.num_pages
         out["pool_used_pages"] = getattr(
             pool, "used", pool.num_pages - len(pool.free))
+        if getattr(pool, "groups", None) is not None:
+            # sliding-window stacks: ring (local-group) pages are charged
+            # separately from the growing tables (see PageGroups)
+            out["pool_used_local_pages"] = getattr(
+                pool, "used_local",
+                pool._local_space() - len(pool.free_local))
         shared = getattr(pool, "shared", None)
         if shared is not None:
             out["shared_pool"] = {

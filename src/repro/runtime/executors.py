@@ -49,18 +49,32 @@ class Executor:
         placed on one pod draws from one physical pool (the paper's
         resource sharing).  ``options['private_pool']=True`` opts out into
         the old one-pool-per-app peak provisioning (the benchmark's
-        baseline arm)."""
+        baseline arm).
+
+        When the app serves through the paged backend on a mixed
+        global/sliding-window stack, the pool carries the model's
+        :class:`~repro.serving.kv_cache.PageGroups` so local-attention
+        layers are charged a bounded ring instead of the growing table
+        (``options['swa_rings']=False`` opts out, the benchmark's no-ring
+        arm)."""
         opts = handle.app.options
         pages = int(opts.get("pool_pages", self.default_pool_pages))
         policy = opts.get("policy", "history")
+        groups = None
+        if (opts.get("backend") == "paged" and handle.app.config is not None
+                and opts.get("swa_rings", True)):
+            from repro.serving.kv_cache import PageGroups
+            g = PageGroups.from_config(handle.app.config)
+            groups = g if g.local_layers else None
         if opts.get("private_pool"):
             return PagePool(pages, history=handle.cluster.history,
-                            app=handle.app.name, policy=policy)
+                            app=handle.app.name, policy=policy,
+                            groups=groups)
         shared = handle.cluster.pod_pool(handle.pod, default_pages=pages)
         return shared.view(handle.app.name,
                            quota=opts.get("quota_pages"),
                            weight=float(opts.get("weight", 1.0)),
-                           policy=policy)
+                           policy=policy, groups=groups)
 
     def build_engine(self, handle: "AppHandle") -> ServingEngine:
         opts = handle.app.options
@@ -201,7 +215,9 @@ class JaxExecutor(Executor):
             runner = build_runner(opts.get("backend", "dense"), app.config,
                                   seed=self.seed, max_batch=max_batch,
                                   cache_len=int(opts.get("cache_len", 256)),
-                                  pool_pages=pool.physical_pages)
+                                  pool_pages=pool.physical_pages,
+                                  use_rings=bool(opts.get("swa_rings",
+                                                          True)))
         except Exception:
             # the pool view is already registered on the pod: an orphan
             # would dilute every tenant's fair share forever

@@ -150,13 +150,14 @@ class ServingEngine:
         self.preempt(min(self.running, key=lambda r: r.generated))
         return True
 
-    def drain(self) -> List[Tuple[Request, List[int]]]:
+    def drain(self) -> List[Tuple[Request, Tuple[List[int], List[int]]]]:
         """Park support: reclaim every running request's pages without
-        completing it.  Returns (request, held page ids) in running order
-        -- the order matters, because unpark must rebuild ``running`` in
-        the same order for batch-identical decoding.  The page *contents*
-        are untouched; the caller (``repro.autoscale.parking``) snapshots
-        them to host before the ids are re-allocated."""
+        completing it.  Returns (request, (global page ids, local ring
+        page ids)) in running order -- the order matters, because unpark
+        must rebuild ``running`` in the same order for batch-identical
+        decoding.  The page *contents* are untouched; the caller
+        (``repro.autoscale.parking``) snapshots them to host before the
+        ids are re-allocated."""
         drained = []
         for req in list(self.running):
             drained.append((req, self.pool.reclaim(req)))
@@ -214,6 +215,11 @@ class ServingEngine:
             if req.generated >= req.max_new_tokens:
                 self.running.remove(req)
                 self.pool.release(req)
+                if self.runner is not None:
+                    # evict per-request runner state (tokens move to
+                    # req.output_tokens): a long-running engine must not
+                    # accumulate completed requests' token lists
+                    self.runner.finish(req)
                 self.stats.completed += 1
         self.stats.decode_steps += 1
         return bool(self.queue or self.running)

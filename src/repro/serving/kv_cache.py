@@ -26,6 +26,54 @@ from repro.core.sizing import SizingSolution, solve_init_step
 PAGE_SIZE = 128  # tokens per page
 
 
+@dataclass(frozen=True)
+class PageGroups:
+    """Per-layer-kind page accounting for a mixed global/sliding-window
+    stack.
+
+    A *global* attention layer's page table grows with sequence length; a
+    *sliding-window* (ATTN_LOCAL) layer only ever needs a fixed ring of
+    ``ceil(window/PAGE_SIZE) + 1`` pages -- the ring covers the window
+    plus the partially-written page decode is landing in.  The two
+    groups index DISJOINT per-layer device arrays, so they are granted
+    from independent page-id spaces and charged separately: a
+    long-generation request on a gemma3-style 5-local:1-global stack
+    holds ``O(length)`` pages on one sixth of its layers and ``O(window)``
+    on the rest, instead of ``O(length)`` on all of them.
+    """
+
+    global_layers: int              # layers with growing page tables
+    local_layers: int               # sliding-window layers (ring pages)
+    window: int                     # tokens; > 0 iff local_layers > 0
+
+    @classmethod
+    def from_config(cls, cfg) -> "PageGroups":
+        """Group split of a ModelConfig's pattern (one pattern repeat)."""
+        from repro.configs.base import ATTN_LOCAL
+        n_local = sum(1 for k in cfg.pattern if k == ATTN_LOCAL)
+        return cls(global_layers=len(cfg.pattern) - n_local,
+                   local_layers=n_local,
+                   window=cfg.sliding_window if n_local else 0)
+
+    @property
+    def ring_pages(self) -> int:
+        """Fixed per-request page count of one local layer's ring."""
+        if self.local_layers == 0:
+            return 0
+        return -(-self.window // PAGE_SIZE) + 1
+
+    @property
+    def w_global(self) -> float:
+        """Fraction of the per-page HBM footprint a global page costs."""
+        total = self.global_layers + self.local_layers
+        return self.global_layers / max(total, 1)
+
+    @property
+    def w_local(self) -> float:
+        total = self.global_layers + self.local_layers
+        return self.local_layers / max(total, 1)
+
+
 @dataclass
 class Request:
     req_id: str
@@ -36,6 +84,12 @@ class Request:
     state: str = "queued"     # queued|running|done|preempted|rejected|parked
     submitted_at: float = 0.0       # engine-stamped (perf_counter)
     first_token_at: Optional[float] = None
+    # sliding-window ring pages (only when the pool has a local group);
+    # capped at PageGroups.ring_pages regardless of sequence length
+    local_pages: List[int] = field(default_factory=list)
+    # completed output (prefill token + decoded tokens); the runner hands
+    # ownership back here on completion so its `generated` dict can evict
+    output_tokens: Optional[List[int]] = None
 
     @property
     def length(self) -> int:
@@ -48,13 +102,20 @@ class Request:
         """Pages needed at completion (prompt fully decoded)."""
         return -(-(self.prompt_len + self.max_new_tokens) // PAGE_SIZE)
 
+    def local_pages_needed(self, groups: PageGroups,
+                           horizon: int = 0) -> int:
+        """Ring pages a local layer needs at the current length: grows
+        like the global table until the ring is full, then stays put."""
+        return min(self.pages_needed(horizon), groups.ring_pages)
+
 
 class PagePool:
     """Fixed pool of KV pages; per-request grants follow the sizing policy."""
 
     def __init__(self, num_pages: int, history: Optional[HistoryStore] = None,
                  app: str = "serve", policy: str = "history",
-                 fixed_init_pages: int = 2, fixed_step_pages: int = 1):
+                 fixed_init_pages: int = 2, fixed_step_pages: int = 1,
+                 groups: Optional[PageGroups] = None):
         self.num_pages = num_pages
         self.free: List[int] = list(range(num_pages))
         self.history = history
@@ -65,6 +126,35 @@ class PagePool:
         self._solve_counter = 0
         self.stats = {"grants": 0, "grant_pages": 0, "denials": 0,
                       "scaleups": 0, "released": 0}
+        # per-layer-group accounting (sliding-window rings).  The local
+        # group's pages index a DISJOINT set of per-layer device arrays,
+        # so they come from their own id space over the same pool size.
+        self.groups = None
+        self.free_local: Optional[List[int]] = None
+        if groups is not None:
+            self.set_groups(groups)
+
+    def set_groups(self, groups: Optional[PageGroups]) -> None:
+        """Attach (or refresh) the layer-group split.  Must happen while
+        no request holds pages -- the id spaces are being (re)defined."""
+        self.groups = groups if (groups and groups.local_layers) else None
+        self.free_local = (list(range(self._local_space()))
+                           if self.groups else None)
+
+    def _local_space(self) -> int:
+        """Size of the local-group page-id space (the runner's local
+        arrays are pool-sized, like the global ones)."""
+        return self.num_pages
+
+    def _ring_pages(self) -> int:
+        return self.groups.ring_pages if self.groups else 0
+
+    def _global_need(self, req: Request, horizon: int = 0) -> int:
+        """Pages the growing (global-group) table needs; zero for a stack
+        with no global-KV layers at all."""
+        if self.groups is not None and self.groups.global_layers == 0:
+            return 0
+        return req.pages_needed(horizon)
 
     # -- sizing policy ------------------------------------------------------
     def sizing(self) -> SizingSolution:
@@ -94,6 +184,16 @@ class PagePool:
     def _dealloc(self, pages: List[int]) -> None:
         self.free.extend(pages)
 
+    def _alloc_local(self, n: int) -> Optional[List[int]]:
+        """Take n local-group (ring) pages from the local id space."""
+        if self.free_local is None or n > len(self.free_local):
+            return None
+        return [self.free_local.pop() for _ in range(n)]
+
+    def _dealloc_local(self, pages: List[int]) -> None:
+        if pages:
+            self.free_local.extend(pages)
+
     def _page_cap(self) -> int:
         """Hard page ceiling a single request can ever hold."""
         return self.num_pages
@@ -103,28 +203,57 @@ class PagePool:
         hard cap -- no sequence of grows or preemptions can serve it, so
         the engine must reject it instead of retrying forever (counted as
         a permanent denial)."""
-        if req.max_pages() <= self._page_cap():
+        need = req.max_pages()
+        if self.groups is not None:
+            if self.groups.global_layers == 0:
+                need = 0
+            need = max(need, self._ring_pages())
+        if need <= self._page_cap():
             return True
         self.stats["denials"] += 1
         return False
 
     # -- allocation ---------------------------------------------------------
+    def _grant_local(self, req: Request, horizon: int = 0) -> bool:
+        """Top the ring grant up to what the current length needs (never
+        past the ring).  Rolls back nothing itself -- callers do."""
+        if self.groups is None:
+            return True
+        need = (req.local_pages_needed(self.groups, horizon)
+                - len(req.local_pages))
+        if need <= 0:
+            return True
+        got = self._alloc_local(need)
+        if got is None:
+            return False
+        req.local_pages.extend(got)
+        return True
+
     def try_admit(self, req: Request) -> bool:
-        """Initial grant: max(prompt pages, policy init)."""
+        """Initial grant: max(prompt pages, policy init) on the global
+        table, plus (for sliding-window stacks) the prompt's ring pages."""
         sz = self.sizing()
-        # a policy init larger than the hard cap must not turn a servable
-        # request into a permanent denial: clamp, never below actual need
-        want = max(req.pages_needed(),
-                   min(max(req.pages_needed(), int(sz.init)),
-                       self._page_cap()))
+        if self.groups is not None and self.groups.global_layers == 0:
+            want = 0          # pure-local stack: no growing table at all
+        else:
+            # a policy init larger than the hard cap must not turn a
+            # servable request into a permanent denial: clamp, never
+            # below actual need
+            need = self._global_need(req)
+            want = max(need, min(max(need, int(sz.init)), self._page_cap()))
         got = self._alloc(want)
         if got is None:
             self.stats["denials"] += 1
             return False
         req.pages = got
+        if not self._grant_local(req):
+            req.pages = []
+            self._dealloc(got)
+            self.stats["denials"] += 1
+            return False
         req.state = "running"
         self.stats["grants"] += 1
-        self.stats["grant_pages"] += want
+        self.stats["grant_pages"] += want + len(req.local_pages)
         self._solve_counter += 1
         return True
 
@@ -133,17 +262,26 @@ class PagePool:
 
         ``horizon`` asks for headroom beyond the current length: the engine
         grows with horizon=1 so the NEXT token's write slot is always backed
-        by a physical page (the paged runner scatters into it)."""
-        if req.pages_needed(horizon) <= len(req.pages):
+        by a physical page (the paged runner scatters into it).  Layer
+        groups grow independently: the global table keeps extending, the
+        local ring stops charging once it holds ``ring_pages``."""
+        held_local = len(req.local_pages)
+        if not self._grant_local(req, horizon):
+            self.stats["denials"] += 1
+            return False
+        if self._global_need(req, horizon) <= len(req.pages):
             return True
         sz = self.sizing()
-        need = req.pages_needed(horizon) - len(req.pages)
+        need = self._global_need(req, horizon) - len(req.pages)
         # clamp the policy step to the cap headroom (see try_admit): a
         # too-big step would deny forever what `need` pages would serve
         want = max(need, min(max(int(sz.step), need),
                              self._page_cap() - len(req.pages)))
         got = self._alloc(want)
         if got is None:
+            grown = req.local_pages[held_local:]
+            del req.local_pages[held_local:]
+            self._dealloc_local(grown)
             self.stats["denials"] += 1
             return False
         req.pages.extend(got)
@@ -152,32 +290,45 @@ class PagePool:
 
     def release(self, req: Request) -> None:
         self._dealloc(req.pages)
+        self._dealloc_local(req.local_pages)
         self.stats["released"] += 1
         if self.history is not None:
             self.history.observe(self.app, "request", "pages",
                                  max(len(req.pages), 1))
         req.pages = []
+        req.local_pages = []
         req.state = "done"
 
     # -- park/unpark (idle reclamation; repro.autoscale.parking) -------------
-    def reclaim(self, req: Request) -> List[int]:
+    def reclaim(self, req: Request) -> Tuple[List[int], List[int]]:
         """Return a request's pages WITHOUT completing it: no history
         sample (the request resumes with the same footprint) and no
-        'released' count.  Returns the page ids it held, so the drained
-        KV can be restored into freshly granted pages on unpark."""
+        'released' count.  Returns the (global, local-ring) page ids it
+        held, so the drained KV can be restored into freshly granted
+        pages on unpark."""
         held, req.pages = req.pages, []
+        held_local, req.local_pages = req.local_pages, []
         self._dealloc(held)
+        self._dealloc_local(held_local)
         req.state = "parked"
-        return held
+        return held, held_local
 
-    def regrant(self, req: Request, n: int) -> bool:
-        """Unpark: re-grant exactly the drained page count (the sizing
+    def regrant(self, req: Request, n: int, n_local: int = 0) -> bool:
+        """Unpark: re-grant exactly the drained page counts (the sizing
         policy already spoke when the pages were first granted)."""
         got = self._alloc(n)
         if got is None:
             self.stats["denials"] += 1
             return False
+        got_local: List[int] = []
+        if n_local:
+            got_local = self._alloc_local(n_local)
+            if got_local is None:
+                self._dealloc(got)
+                self.stats["denials"] += 1
+                return False
         req.pages = got
+        req.local_pages = got_local
         req.state = "running"
         return True
 
@@ -188,7 +339,18 @@ class PagePool:
 
     @property
     def utilization(self) -> float:
-        return 1.0 - len(self.free) / max(self.num_pages, 1)
+        """Fraction of the pool's page-layer slots in use.  Without layer
+        groups this is plain used/total; with groups each group's usage
+        is weighted by the fraction of layers its pages actually occupy,
+        so a sliding-window stack's bounded rings show up as the lower
+        footprint they are."""
+        used_g = self.num_pages - len(self.free)
+        if self.groups is None:
+            return used_g / max(self.num_pages, 1)
+        used_l = self._local_space() - len(self.free_local)
+        return ((self.groups.w_global * used_g
+                 + self.groups.w_local * used_l)
+                / max(self.num_pages, 1))
 
 
 def page_table(requests: Sequence[Request], max_pages: int) -> np.ndarray:

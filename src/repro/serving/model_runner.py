@@ -20,6 +20,21 @@ Two implementations:
   Positions and valid lengths are exact per request, so co-batched
   requests of different lengths decode correctly -- and the KV footprint
   is the pages the sizing policy granted, not ``max_batch * cache_len``.
+  Mixed global/sliding-window stacks (gemma3-style) are supported:
+  ATTN_LOCAL layers keep a fixed *ring* of ``ceil(window/PAGE_SIZE)+1``
+  pages per request (see :class:`~repro.serving.kv_cache.PageGroups`)
+  while global layers keep the growing table.
+
+Compile discipline (long-run serving must not recompile per step):
+
+* decode pads the batch to ``max_batch`` (idle lanes write into a trash
+  page and are fully masked) and buckets the page-table width to the
+  next power of two, so a bursty run triggers O(log pool) decode
+  compiles, not O(steps);
+* prefill scatters prompt KV page-by-page straight from a
+  prompt-length-bucketed forward -- no dense ``n_pages * PAGE_SIZE``
+  cache is ever built, so there is no per-grant-size recompile and no
+  transient dense allocation.
 
 Prompt tokens are synthesized from a *stable* digest of the request id
 (``zlib.crc32``): ``hash()`` is salted per process, which made served
@@ -36,14 +51,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import _from_saved, _to_savable
-from repro.configs.base import ATTN_GLOBAL, ModelConfig
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
 from repro.kernels import ops
 from repro.kernels.paged_attention import paged_attention_ref
 from repro.models import ImplConfig, build_model
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serving.kv_cache import PAGE_SIZE, Request, page_table
+from repro.serving.kv_cache import (PAGE_SIZE, PageGroups, Request,
+                                    page_table)
 
 KV_DTYPE = jnp.bfloat16
 
@@ -53,6 +69,10 @@ def synth_prompt(req_id: str, prompt_len: int, vocab: int) -> jax.Array:
     seed = zlib.crc32(req_id.encode()) % 2**31
     return jax.random.randint(jax.random.PRNGKey(seed), (1, prompt_len),
                               0, vocab)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 class ModelRunner:
@@ -73,6 +93,15 @@ class ModelRunner:
     def decode(self, running: List[Request]) -> None:
         raise NotImplementedError
 
+    def finish(self, req: Request) -> None:
+        """Completion hook (the engine calls this when a request is done):
+        hand the tokens back to the request and evict every per-request
+        runner entry -- a long-running engine must not accumulate state
+        for requests that already left."""
+        toks = self.generated.pop(req.req_id, None)
+        if toks is not None:
+            req.output_tokens = toks
+
     # -- idle parking (repro.autoscale.parking) ------------------------------
     @staticmethod
     def _tree_to_host(tree) -> Tuple[list, Any]:
@@ -88,13 +117,15 @@ class ModelRunner:
         return jax.tree.unflatten(
             treedef, [jnp.asarray(_from_saved(a, d)) for a, d in leaves])
 
-    def park(self, drained: List[Tuple[Request, List[int]]]) -> Dict:
+    def park(self, drained: List[Tuple[Request, Tuple[List[int],
+                                                      List[int]]]]) -> Dict:
         """Snapshot decode state AND params to host (checkpointer array
         format) and DROP the device copies, so a parked app's HBM is
         actually reclaimable -- the scheduler hands back 100% of the
         job's bytes, which must not leave weights silently resident.
-        ``drained`` is the engine's ``drain()`` output: (request, page
-        ids it held), with the page contents still intact on device."""
+        ``drained`` is the engine's ``drain()`` output: (request, (global
+        page ids, local ring page ids) it held), with the page contents
+        still intact on device."""
         state = {"generated": {k: list(v)
                                for k, v in self.generated.items()}}
         if getattr(self, "params", None) is not None:
@@ -136,7 +167,7 @@ class DenseRunner(ModelRunner):
         toks = synth_prompt(req.req_id, req.prompt_len, self.cfg.vocab_size)
         logits, rc = self._prefill(self.params, {"tokens": toks})
         # evict slots of preempted requests (the engine re-queues them;
-        # only completion frees a slot in decode) before picking one
+        # only completion frees a slot via finish) before picking one
         running_ids = {r.req_id for r in self.engine.running}
         for rid in list(self.slots):
             if rid not in running_ids:
@@ -169,8 +200,10 @@ class DenseRunner(ModelRunner):
         for req in running:
             slot, _ = self.slots[req.req_id]
             self.generated[req.req_id].append(int(nxt[slot]))
-            if req.generated + 1 >= req.max_new_tokens:
-                self.slots.pop(req.req_id, None)
+
+    def finish(self, req: Request) -> None:
+        super().finish(req)
+        self.slots.pop(req.req_id, None)
 
     def park(self, drained):
         """The dense cache is one contiguous tree: snapshot every leaf to
@@ -190,36 +223,51 @@ class DenseRunner(ModelRunner):
 class PagedRunner(ModelRunner):
     """KV in pool pages; decode through the paged-attention kernel.
 
-    Supports RoPE global-attention stacks (llama-family patterns); other
-    block kinds (SWA rings, SSM state, cross attention) keep the dense
-    backend until they grow paged layouts.
+    Supports RoPE decoder-only stacks mixing ATTN_GLOBAL and ATTN_LOCAL
+    blocks (llama- and gemma3-family patterns).  Global layers keep a
+    page table that grows with sequence length; sliding-window layers
+    keep a fixed per-request ring of ``PageGroups.ring_pages`` pages --
+    decode writes token ``p`` at ring slot ``p % (ring_pages *
+    PAGE_SIZE)`` and the kernel's ring masking recovers each slot's
+    absolute position.  Other block kinds (SSM state, MoE, cross
+    attention) keep the dense backend until they grow paged layouts.
 
     Device-memory note: each runner holds its OWN page arrays sized to
     the physical pool (tenants run different models, so their KV arrays
-    cannot alias).  The pod's :class:`SharedPagePool` bounds the
-    *accounted* combined footprint; true on-device sharing of one array
-    set across same-model tenants needs a view-local page-id remap
-    (ROADMAP).
+    cannot alias); the last page (index ``pool_pages``) is a write-only
+    trash page for padded batch lanes.  The pod's
+    :class:`SharedPagePool` bounds the *accounted* combined footprint;
+    true on-device sharing of one array set across same-model tenants
+    needs a view-local page-id remap (ROADMAP).
     """
 
     backend = "paged"
 
+    SUPPORTED_KINDS = (ATTN_GLOBAL, ATTN_LOCAL)
+
     def __init__(self, cfg: ModelConfig, *, seed: int = 0,
-                 pool_pages: int = 128):
+                 pool_pages: int = 128, max_batch: int = 4,
+                 use_rings: bool = True):
         super().__init__()
-        if (any(k != ATTN_GLOBAL for k in cfg.pattern)
+        if (any(k not in self.SUPPORTED_KINDS for k in cfg.pattern)
                 or cfg.rope_theta <= 0 or cfg.is_encdec
                 or cfg.family in ("vlm", "audio")):
             raise ValueError(
-                f"backend='paged' supports global-attention RoPE stacks; "
-                f"{cfg.name} has pattern={cfg.pattern}")
+                f"backend='paged' supports RoPE global/sliding-window "
+                f"attention stacks; {cfg.name} has pattern={cfg.pattern}")
+        if ATTN_LOCAL in cfg.pattern and cfg.sliding_window <= 0:
+            raise ValueError(f"{cfg.name}: ATTN_LOCAL needs sliding_window")
         self.cfg = cfg
+        self.max_batch = max_batch
+        self.groups = PageGroups.from_config(cfg)
+        self.use_rings = use_rings and self.groups.local_layers > 0
         self.model = build_model(cfg, ImplConfig(remat="none"))
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
-        self._prefill = jax.jit(self.model.prefill, static_argnums=2)
         nb, pat = cfg.num_blocks, len(cfg.pattern)
         self.num_layers = nb * pat
-        self.page_shape = (pool_pages, PAGE_SIZE, cfg.num_kv_heads,
+        self.pool_pages = pool_pages
+        self.trash_page = pool_pages            # padded lanes write here
+        self.page_shape = (pool_pages + 1, PAGE_SIZE, cfg.num_kv_heads,
                            cfg.head_dim)
         shape = self.page_shape
         self.k_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
@@ -230,58 +278,151 @@ class PagedRunner(ModelRunner):
         self._paged_attn = (ops.paged_attention
                             if jax.default_backend() == "tpu"
                             else paged_attention_ref)
+        # compile-count observability: incremented at TRACE time, so each
+        # attribute counts XLA compiles, not calls (regression-tested)
+        self.decode_traces = 0
+        self.prefill_traces = 0
         # page arrays are donated: XLA updates them in place instead of
         # copying the whole pool per layer per token
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(7, 8))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(9, 10))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(6, 7))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0, 1))
+
+    def _layer_kind(self, layer: int) -> str:
+        return self.cfg.pattern[layer % len(self.cfg.pattern)]
+
+    def _layer_ring(self, layer: int) -> bool:
+        """Whether this layer's table is a ring (vs a growing table)."""
+        return self.use_rings and self._layer_kind(layer) == ATTN_LOCAL
 
     @staticmethod
     def _scatter_fn(kp, vp, pages, k, v):
         return (kp.at[pages].set(k.astype(KV_DTYPE)),
                 vp.at[pages].set(v.astype(KV_DTYPE)))
 
+    def _block_forward(self, bp, x, positions, mix):
+        """One pattern block (the shared prefill/decode layer body).
+        ``mix(q, k, v) -> (B, S, H, hd)`` carries the phase-specific
+        part: writing KV into the page arrays and attending through the
+        layer's table -- everything else must stay identical between the
+        two phases or they diverge from dense in only one of them."""
+        cfg = self.cfg
+        h = T.apply_norm(cfg, bp["ln1"], x)
+        q, k, v = attn.project_qkv(bp["attn"], h, cfg, positions)
+        x = x + attn.attn_out(bp["attn"], mix(q, k, v))
+        h = T.apply_norm(cfg, bp["ln2"], x)
+        return x + L.gated_mlp(bp["mlp"], h)
+
+    # -- prefill -------------------------------------------------------------
+    def _prefill_fn(self, params, toks, last, g_ids, l_ids, l_src,
+                    k_pages, v_pages):
+        """Forward over the (page-padded) prompt, scattering each layer's
+        KV page-by-page into the granted ids: no dense ``cache_len``
+        cache, no per-grant-size recompile (the compile key is the padded
+        prompt page count only).  ``last`` is the index of the final real
+        prompt token; ``l_src`` names the prompt pages that survive in
+        the ring (the last ``ring_pages`` of them)."""
+        self.prefill_traces += 1
+        cfg = self.cfg
+        s = toks.shape[1]
+        n_pg = s // PAGE_SIZE
+        positions = jnp.arange(s)
+        x = self.model._embed(params, toks)
+        new_k, new_v = list(k_pages), list(v_pages)
+        for layer in range(len(new_k)):
+            j, i = divmod(layer, len(cfg.pattern))
+            kind = cfg.pattern[i]
+            bp = jax.tree.map(lambda a: a[j],
+                              params["blocks"][f"p{i}_{kind}"])
+
+            def mix(q, k, v, layer=layer, kind=kind):
+                kpg = k[0].reshape(n_pg, PAGE_SIZE, cfg.num_kv_heads,
+                                   cfg.head_dim).astype(KV_DTYPE)
+                vpg = v[0].reshape(n_pg, PAGE_SIZE, cfg.num_kv_heads,
+                                   cfg.head_dim).astype(KV_DTYPE)
+                if self._layer_ring(layer):
+                    new_k[layer] = new_k[layer].at[l_ids].set(kpg[l_src])
+                    new_v[layer] = new_v[layer].at[l_ids].set(vpg[l_src])
+                else:
+                    new_k[layer] = new_k[layer].at[g_ids].set(kpg)
+                    new_v[layer] = new_v[layer].at[g_ids].set(vpg)
+                window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+                return attn.sdpa(q, k, v, causal=True, window=window,
+                                 q_positions=positions,
+                                 k_positions=positions)
+
+            x = self._block_forward(bp, x, positions, mix)
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        xl = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        logits = L.unembed(params["embed"], xl, cfg.logit_softcap)
+        return jnp.argmax(logits[0, -1]), new_k, new_v
+
     def prefill(self, req: Request) -> None:
-        """Forward over the prompt, then scatter its KV into the request's
-        granted pages (page p holds tokens [p*PAGE, (p+1)*PAGE))."""
-        assert req.pages, f"{req.req_id}: prefill before admission"
+        """Forward over the prompt, scattering its KV page-by-page into
+        the request's granted pages (global page p holds tokens
+        [p*PAGE, (p+1)*PAGE); ring layers keep the last ``ring_pages``
+        prompt pages at their ring slots)."""
+        assert req.pages or req.local_pages, \
+            f"{req.req_id}: prefill before admission"
         cfg = self.cfg
         toks = synth_prompt(req.req_id, req.prompt_len, cfg.vocab_size)
-        cache_len = len(req.pages) * PAGE_SIZE
-        logits, cache = self._prefill(self.params, {"tokens": toks},
-                                      cache_len)
-        pages = jnp.asarray(req.pages, jnp.int32)
-        for layer in range(len(self.k_pages)):
-            j, i = divmod(layer, len(cfg.pattern))
-            kv = cache[f"p{i}_{cfg.pattern[i]}"]
-            # (nb, 1, KV, cache_len, hd) -> (n_pages, PAGE, KV, hd)
-            k = kv["k"][j, 0].transpose(1, 0, 2).reshape(
-                len(req.pages), PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
-            v = kv["v"][j, 0].transpose(1, 0, 2).reshape(
-                len(req.pages), PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim)
-            self.k_pages[layer], self.v_pages[layer] = self._scatter(
-                self.k_pages[layer], self.v_pages[layer], pages, k, v)
-        self.generated[req.req_id] = [int(jnp.argmax(logits[0, -1]))]
+        n_pg = -(-req.prompt_len // PAGE_SIZE)
+        pad = n_pg * PAGE_SIZE - req.prompt_len
+        if pad:
+            toks = jnp.pad(toks, ((0, 0), (0, pad)))
+        if req.pages:
+            g_ids = np.asarray(req.pages[:n_pg], np.int32)
+        else:                               # pure-local stack: unused
+            g_ids = np.full(n_pg, self.trash_page, np.int32)
+        if self.use_rings:
+            ring = self.groups.ring_pages
+            # the last min(ring, n_pg) prompt pages survive, each at ring
+            # slot (page % ring) -- consecutive pages hit distinct slots
+            l_src = np.arange(max(0, n_pg - ring), n_pg, dtype=np.int32)
+            l_ids = np.asarray([req.local_pages[j % ring] for j in l_src],
+                               np.int32)
+        else:
+            l_src = np.zeros(0, np.int32)
+            l_ids = np.zeros(0, np.int32)
+        nxt, self.k_pages, self.v_pages = self._prefill(
+            self.params, toks, jnp.asarray(req.prompt_len - 1, jnp.int32),
+            jnp.asarray(g_ids), jnp.asarray(l_ids), jnp.asarray(l_src),
+            self.k_pages, self.v_pages)
+        self.generated[req.req_id] = [int(nxt)]
 
-    def _decode_fn(self, params, toks, positions, phys, off, table, vlen,
-                   k_pages, v_pages):
+    # -- decode --------------------------------------------------------------
+    def _decode_fn(self, params, toks, positions, phys_g, phys_l, off,
+                   table_g, table_l, vlen, k_pages, v_pages):
         """One batched decode step over the whole stack (jitted; the page
-        arrays are donated so per-layer writes happen in place)."""
+        arrays are donated so per-layer writes happen in place).  Each
+        layer writes at its group's physical page (growing table vs ring)
+        and attends through its group's page table."""
+        self.decode_traces += 1
         cfg = self.cfg
+        w = cfg.sliding_window
         new_k, new_v = list(k_pages), list(v_pages)
         x = self.model._embed(params, toks)
         for layer in range(len(new_k)):
             j, i = divmod(layer, len(cfg.pattern))
+            kind = cfg.pattern[i]
             bp = jax.tree.map(lambda a: a[j],
-                              params["blocks"][f"p{i}_{cfg.pattern[i]}"])
-            h = T.apply_norm(cfg, bp["ln1"], x)
-            q, k, v = attn.project_qkv(bp["attn"], h, cfg, positions)
-            kp = new_k[layer].at[phys, off].set(k[:, 0].astype(KV_DTYPE))
-            vp = new_v[layer].at[phys, off].set(v[:, 0].astype(KV_DTYPE))
-            new_k[layer], new_v[layer] = kp, vp
-            o = self._paged_attn(q[:, 0], kp, vp, table, vlen)
-            x = x + attn.attn_out(bp["attn"], o[:, None])
-            h = T.apply_norm(cfg, bp["ln2"], x)
-            x = x + L.gated_mlp(bp["mlp"], h)
+                              params["blocks"][f"p{i}_{kind}"])
+
+            def mix(q, k, v, layer=layer, kind=kind):
+                ring = self._layer_ring(layer)
+                phys = phys_l if ring else phys_g
+                kp = new_k[layer].at[phys, off].set(
+                    k[:, 0].astype(KV_DTYPE))
+                vp = new_v[layer].at[phys, off].set(
+                    v[:, 0].astype(KV_DTYPE))
+                new_k[layer], new_v[layer] = kp, vp
+                o = self._paged_attn(q[:, 0], kp, vp,
+                                     table_l if ring else table_g, vlen,
+                                     window=w if kind == ATTN_LOCAL else 0,
+                                     ring=ring)
+                return o[:, None]
+
+            x = self._block_forward(bp, x, positions, mix)
         x = T.apply_norm(cfg, params["ln_f"], x)
         logits = L.unembed(params["embed"], x, cfg.logit_softcap)
         return jnp.argmax(logits[:, -1], -1), new_k, new_v
@@ -289,41 +430,78 @@ class PagedRunner(ModelRunner):
     def decode(self, running: List[Request]) -> None:
         if not running:
             return
+        b = self.max_batch
+        assert len(running) <= b, f"{len(running)} running > max_batch {b}"
+        ring = self.groups.ring_pages if self.use_rings else 1
         pos = np.asarray([r.length for r in running])     # write positions
         for r, p in zip(running, pos):
-            if p // PAGE_SIZE >= len(r.pages):
+            if r.pages and p // PAGE_SIZE >= len(r.pages):
                 raise RuntimeError(
                     f"{r.req_id}: token {p} beyond granted pages "
                     f"({len(r.pages)}) -- engine must grow with horizon=1")
-        toks = jnp.asarray([[self.generated[r.req_id][-1]] for r in running],
-                           jnp.int32)
-        maxp = max(len(r.pages) for r in running)
-        table = jnp.asarray(page_table(running, maxp))
-        vlen = jnp.asarray(pos + 1, jnp.int32)
-        positions = jnp.asarray(pos, jnp.int32)[:, None]  # (B, 1) exact
-        phys = jnp.asarray([r.pages[p // PAGE_SIZE]
-                            for r, p in zip(running, pos)], jnp.int32)
-        off = jnp.asarray(pos % PAGE_SIZE, jnp.int32)
+            if (self.use_rings
+                    and (p // PAGE_SIZE) % ring >= len(r.local_pages)):
+                raise RuntimeError(
+                    f"{r.req_id}: token {p} beyond granted ring pages "
+                    f"({len(r.local_pages)}/{ring})")
+        # batch is padded to max_batch: idle lanes write into the trash
+        # page with an all-masked table, so the compile key is constant
+        # in batch size; the table width is bucketed to the next power of
+        # two so a growing widest-grant re-buckets O(log pool) times
+        maxp_b = _next_pow2(max(max(len(r.pages) for r in running), 1))
+        toks = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b, 1), np.int32)
+        offs = np.zeros(b, np.int32)
+        vlen = np.ones(b, np.int32)
+        phys_g = np.full(b, self.trash_page, np.int32)
+        phys_l = np.full(b, self.trash_page, np.int32)
+        table_g = np.full((b, maxp_b), -1, np.int32)
+        table_g[:len(running)] = page_table(running, maxp_b)
+        table_l = np.full((b, ring), -1, np.int32)
+        for i, (r, p) in enumerate(zip(running, pos)):
+            toks[i, 0] = self.generated[r.req_id][-1]
+            positions[i, 0] = p
+            offs[i] = p % PAGE_SIZE
+            vlen[i] = p + 1
+            if r.pages:
+                phys_g[i] = r.pages[p // PAGE_SIZE]
+            if self.use_rings:
+                phys_l[i] = r.local_pages[(p // PAGE_SIZE) % ring]
+                table_l[i, :len(r.local_pages)] = r.local_pages
         nxt, self.k_pages, self.v_pages = self._decode(
-            self.params, toks, positions, phys, off, table, vlen,
+            self.params, jnp.asarray(toks), jnp.asarray(positions),
+            jnp.asarray(phys_g), jnp.asarray(phys_l), jnp.asarray(offs),
+            jnp.asarray(table_g), jnp.asarray(table_l), jnp.asarray(vlen),
             self.k_pages, self.v_pages)
         nxt = np.asarray(nxt)
-        for b, req in enumerate(running):
-            self.generated[req.req_id].append(int(nxt[b]))
+        for i, req in enumerate(running):
+            self.generated[req.req_id].append(int(nxt[i]))
 
+    # -- parking -------------------------------------------------------------
     def park(self, drained):
-        """Gather each drained request's KV pages to host (one
-        (layers, n_pages, PAGE, KV, hd) array per request, page ids
-        dropped -- unpark scatters into whatever fresh ids are granted)
-        and free the pool-sized device arrays, the bulk of a serve app's
-        HBM footprint."""
+        """Gather each drained request's KV pages to host (per layer
+        group: one (layers, n_pages, PAGE, KV, hd) array for the growing
+        tables and one for the rings, page ids dropped -- unpark scatters
+        into whatever fresh ids are granted) and free the pool-sized
+        device arrays, the bulk of a serve app's HBM footprint."""
         state = super().park(drained)
+        table_layers = [l for l in range(self.num_layers)
+                        if not self._layer_ring(l)]
+        ring_layers = [l for l in range(self.num_layers)
+                       if self._layer_ring(l)]
+
+        def gather(layers, ids):
+            if not layers or not ids:
+                return None
+            idx = jnp.asarray(ids, jnp.int32)
+            k = np.stack([np.asarray(self.k_pages[l][idx]) for l in layers])
+            v = np.stack([np.asarray(self.v_pages[l][idx]) for l in layers])
+            return (_to_savable(k), _to_savable(v))
+
         kv = {}
-        for req, page_ids in drained:
-            idx = jnp.asarray(page_ids, jnp.int32)
-            k = np.stack([np.asarray(kp[idx]) for kp in self.k_pages])
-            v = np.stack([np.asarray(vp[idx]) for vp in self.v_pages])
-            kv[req.req_id] = (_to_savable(k), _to_savable(v))
+        for req, (g_ids, l_ids) in drained:
+            kv[req.req_id] = {"g": gather(table_layers, g_ids),
+                              "l": gather(ring_layers, l_ids)}
         state["kv"] = kv
         self.k_pages = None
         self.v_pages = None
@@ -335,25 +513,38 @@ class PagedRunner(ModelRunner):
                         for _ in range(self.num_layers)]
         self.v_pages = [jnp.zeros(self.page_shape, KV_DTYPE)
                         for _ in range(self.num_layers)]
+        table_layers = [l for l in range(self.num_layers)
+                        if not self._layer_ring(l)]
+        ring_layers = [l for l in range(self.num_layers)
+                       if self._layer_ring(l)]
         for req in restored:
-            (ka, kd), (va, vd) = state["kv"][req.req_id]
-            k = jnp.asarray(_from_saved(ka, kd))     # (L, n, PAGE, KV, hd)
-            v = jnp.asarray(_from_saved(va, vd))
-            pages = jnp.asarray(req.pages, jnp.int32)
-            for layer in range(self.num_layers):
-                self.k_pages[layer], self.v_pages[layer] = self._scatter(
-                    self.k_pages[layer], self.v_pages[layer], pages,
-                    k[layer], v[layer])
+            saved = state["kv"][req.req_id]
+            for layers, ids, packed in ((table_layers, req.pages,
+                                         saved["g"]),
+                                        (ring_layers, req.local_pages,
+                                         saved["l"])):
+                if packed is None:
+                    continue
+                (ka, kd), (va, vd) = packed
+                k = jnp.asarray(_from_saved(ka, kd))   # (L, n, PAGE, KV, hd)
+                v = jnp.asarray(_from_saved(va, vd))
+                pages = jnp.asarray(ids, jnp.int32)
+                for li, layer in enumerate(layers):
+                    self.k_pages[layer], self.v_pages[layer] = self._scatter(
+                        self.k_pages[layer], self.v_pages[layer], pages,
+                        k[li], v[li])
 
 
 def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,
                  max_batch: int = 4, cache_len: int = 256,
-                 pool_pages: int = 128) -> ModelRunner:
+                 pool_pages: int = 128,
+                 use_rings: bool = True) -> ModelRunner:
     """Factory keyed by ``Application.options['backend']``."""
     if backend == "dense":
         return DenseRunner(cfg, seed=seed, max_batch=max_batch,
                            cache_len=cache_len)
     if backend == "paged":
-        return PagedRunner(cfg, seed=seed, pool_pages=pool_pages)
+        return PagedRunner(cfg, seed=seed, pool_pages=pool_pages,
+                           max_batch=max_batch, use_rings=use_rings)
     raise ValueError(f"unknown serving backend {backend!r} "
                      "(expected 'dense' or 'paged')")

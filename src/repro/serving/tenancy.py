@@ -30,7 +30,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Union
 
 from repro.core.history import HistoryStore
-from repro.serving.kv_cache import PagePool
+from repro.serving.kv_cache import PageGroups, PagePool
 
 
 class SharedPagePool:
@@ -49,7 +49,8 @@ class SharedPagePool:
     def view(self, app: str, *,
              quota: Union[int, str, None] = None, weight: float = 1.0,
              policy: str = "history", fixed_init_pages: int = 2,
-             fixed_step_pages: int = 1) -> "PoolView":
+             fixed_step_pages: int = 1,
+             groups: Optional[PageGroups] = None) -> "PoolView":
         """The (single) view of one application; app names must be unique
         per pod -- a live duplicate would merge two engines' page
         accounting onto one quota and corrupt victim selection."""
@@ -60,10 +61,12 @@ class SharedPagePool:
                     f"serve application {app!r} is already live on this "
                     "pod's shared pool: give each serve Application a "
                     "unique name=")
+            if groups is not None:
+                v.set_groups(groups)
             return v
         v = PoolView(self, app, quota=quota, weight=weight,
                      policy=policy, fixed_init_pages=fixed_init_pages,
-                     fixed_step_pages=fixed_step_pages)
+                     fixed_step_pages=fixed_step_pages, groups=groups)
         self.views[app] = v
         return v
 
@@ -133,7 +136,8 @@ class PoolView(PagePool):
     def __init__(self, shared: SharedPagePool, app: str, *,
                  quota: Union[int, str, None] = None, weight: float = 1.0,
                  policy: str = "history", fixed_init_pages: int = 2,
-                 fixed_step_pages: int = 1):
+                 fixed_step_pages: int = 1,
+                 groups: Optional[PageGroups] = None):
         super().__init__(0, history=shared.history, app=app, policy=policy,
                          fixed_init_pages=fixed_init_pages,
                          fixed_step_pages=fixed_step_pages)
@@ -141,10 +145,19 @@ class PoolView(PagePool):
         self.weight = float(weight)
         self._quota = quota
         self.used = 0
+        self.used_local = 0
         self.engine = None              # set by ServingEngine.attach
         self.parked = False             # set by repro.autoscale.parking
         self.free = []                  # unused: physical list is shared
         self._denial_cause = "physical"
+        if groups is not None:
+            self.set_groups(groups)
+
+    def _local_space(self) -> int:
+        # the local (ring) id space indexes the app's OWN pool-sized
+        # per-layer arrays; its size is the pod pool's physical size, not
+        # this view's (dynamic) quota
+        return self.shared.num_pages
 
     # -- quota --------------------------------------------------------------
     @property
@@ -169,7 +182,7 @@ class PoolView(PagePool):
         number of requests preempted by the shrink."""
         self._quota = quota
         preempted = 0
-        while self.used > self.quota:
+        while self.used > self.quota or self.used_local > self.quota:
             if self.engine is None or not self.engine.preempt_newest():
                 break          # no running request left to give back
             preempted += 1
@@ -198,6 +211,29 @@ class PoolView(PagePool):
     def _dealloc(self, pages: List[int]) -> None:
         self.used -= len(pages)
         self.shared._give(pages)
+
+    def _alloc_local(self, n: int) -> Optional[List[int]]:
+        """Ring pages come from the view's OWN id space (they index the
+        app's private per-layer arrays, not the pod-shared global ones)
+        but still count against this view's quota: the quota caps each
+        layer group's table independently."""
+        if self.free_local is None:
+            return None
+        if self.used_local + n > self.quota:
+            self._denial_cause = "quota"
+            self._note_denial()
+            return None
+        if n > len(self.free_local):
+            self._denial_cause = "physical"
+            self._note_denial()
+            return None
+        self.used_local += n
+        return [self.free_local.pop() for _ in range(n)]
+
+    def _dealloc_local(self, pages: List[int]) -> None:
+        if pages:
+            self.used_local -= len(pages)
+            self.free_local.extend(pages)
 
     def _note_denial(self) -> None:
         d = self.shared.stats["denials"]
@@ -236,4 +272,8 @@ class PoolView(PagePool):
 
     @property
     def utilization(self) -> float:
-        return self.used / max(self.quota, 1)
+        if self.groups is None:
+            return self.used / max(self.quota, 1)
+        return ((self.groups.w_global * self.used
+                 + self.groups.w_local * self.used_local)
+                / max(self.quota, 1))

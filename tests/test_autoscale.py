@@ -370,17 +370,19 @@ def test_park_rejects_wrong_states():
 # parking: token-identical warm restart (both backends)
 # ---------------------------------------------------------------------------
 
-def _serve_with_park(backend, park_cycles, *, n=3, prompt=200, max_new=8):
+def _serve_with_park(backend, park_cycles, *, n=3, prompt=200, max_new=8,
+                     arch="tinyllama-1.1b", steps_before_park=3):
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
     h = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name=f"park-{backend}",
+        arch, reduced=True, name=f"park-{backend}",
         max_batch=4, pool_pages=32, cache_len=512, policy="history",
         backend=backend))
-    for i in range(n):
-        h.submit_request(Request(f"r{i}", prompt_len=prompt,
-                                 max_new_tokens=max_new))
-    for _ in range(3):                  # partial progress, then park
+    reqs = [Request(f"r{i}", prompt_len=prompt, max_new_tokens=max_new)
+            for i in range(n)]
+    for r in reqs:
+        h.submit_request(r)
+    for _ in range(steps_before_park):  # partial progress, then park
         h.step()
     for _ in range(park_cycles):
         h.park()
@@ -388,7 +390,8 @@ def _serve_with_park(backend, park_cycles, *, n=3, prompt=200, max_new=8):
         h.unpark()
         assert h.runner.params is not None
     stats = h.run(max_steps=5_000)
-    tokens = {rid: list(t) for rid, t in h.runner.generated.items()}
+    tokens = {r.req_id: list(r.output_tokens) for r in reqs
+              if r.output_tokens is not None}
     h.release()
     return stats, tokens
 
@@ -404,6 +407,21 @@ def test_unpark_decode_token_identical(backend):
     assert s0["completed"] == s1["completed"] == s2["completed"] == 3
     assert t0 == t1 == t2, f"{backend}: tokens diverged after park/unpark"
     assert all(len(t) == 9 for t in t1.values())    # prefill + 8 decodes
+
+
+def test_unpark_swa_ring_token_identical():
+    """N park/unpark cycles for a sliding-window tenant (reduced gemma3,
+    paged backend): the local-layer ring contents must survive the
+    re-grant -- fresh ring page ids, identical tokens."""
+    # 60 steps of progress first: length 200+59 > 256-token ring space,
+    # so the parked rings hold WRAPPED state when they are snapshot
+    s0, t0 = _serve_with_park("paged", park_cycles=0, arch="gemma3-12b",
+                              prompt=200, max_new=70, steps_before_park=60)
+    s3, t3 = _serve_with_park("paged", park_cycles=3, arch="gemma3-12b",
+                              prompt=200, max_new=70, steps_before_park=60)
+    assert s0["completed"] == s3["completed"] == 3
+    assert t0 == t3, "SWA ring contents diverged across park/unpark"
+    assert all(len(t) == 71 for t in t3.values())   # prefill + 70 decodes
 
 
 def test_unpark_under_pool_pressure():

@@ -249,3 +249,45 @@ def test_paged_matches_contiguous_decode():
     paged = ops.paged_attention(q, kp, vp, table, vlen)
     np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("pos_last", [0, 5, 23, 24, 37, 100])
+def test_paged_attention_ring_window(pos_last):
+    """Ring-table sliding-window path (ATTN_LOCAL layers): kernel and
+    jnp oracle must both match a dense windowed-attention reference when
+    the ring contents are built by last-write-wins over the token
+    history (exactly what decode does)."""
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_ref)
+    page, ring_pages, kvh, h, d, window, pool = 8, 3, 2, 4, 16, 20, 10
+    ring_tokens = ring_pages * page
+    vlen = pos_last + 1
+    keys = np.asarray(ra(vlen, kvh, d), np.float32)
+    vals = np.asarray(ra(vlen, kvh, d), np.float32)
+    kp = np.zeros((pool, page, kvh, d), np.float32)
+    vp = np.zeros((pool, page, kvh, d), np.float32)
+    ring_ids = [7, 2, 5][:min(ring_pages, -(-vlen // page))]
+    table = np.full((1, ring_pages), -1, np.int32)
+    table[0, :len(ring_ids)] = ring_ids
+    for p in range(vlen):          # write each token at its ring slot
+        pg, off = divmod(p % ring_tokens, page)
+        if pg < len(ring_ids):
+            kp[ring_ids[pg], off] = keys[p]
+            vp[ring_ids[pg], off] = vals[p]
+    q = np.asarray(ra(1, h, d), np.float32)
+    args = (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(table), jnp.asarray([vlen]))
+    o_ref = paged_attention_ref(*args, window=window, ring=True)
+    o_krn = paged_attention(*args, window=window, ring=True)
+    # dense reference over the last `window` tokens
+    lo = max(0, vlen - window)
+    k = np.repeat(keys[lo:vlen], h // kvh, axis=1)
+    v = np.repeat(vals[lo:vlen], h // kvh, axis=1)
+    s = np.einsum("hd,shd->hs", q[0], k) * d ** -0.5
+    pr = np.exp(s - s.max(-1, keepdims=True))
+    pr /= pr.sum(-1, keepdims=True)
+    o_dense = np.einsum("hs,shd->hd", pr, v)
+    np.testing.assert_allclose(np.asarray(o_ref)[0], o_dense,
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(o_krn)[0], o_dense,
+                               rtol=2e-5, atol=2e-5)

@@ -13,8 +13,8 @@ from repro.core.history import HistoryStore
 from repro.models import ImplConfig, build_model
 from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import (PAGE_SIZE, PagePool, Request, page_table,
-                                    pool_pages_for_budget)
+from repro.serving.kv_cache import (PAGE_SIZE, PageGroups, PagePool, Request,
+                                    page_table, pool_pages_for_budget)
 from repro.serving.tenancy import SharedPagePool
 
 
@@ -291,18 +291,23 @@ def test_private_pool_opt_out():
 # ---------------------------------------------------------------------------
 
 def _serve_tokens(backend: str, *, pool_pages=32, n=3, prompt=200,
-                  max_new=6, policy="history", max_batch=4):
+                  max_new=6, policy="history", max_batch=4,
+                  arch="tinyllama-1.1b", **opts):
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
-    app = Application.serve("tinyllama-1.1b", reduced=True,
+    app = Application.serve(arch, reduced=True,
                             max_batch=max_batch, pool_pages=pool_pages,
-                            cache_len=512, policy=policy, backend=backend)
+                            cache_len=512, policy=policy, backend=backend,
+                            **opts)
     h = cluster.submit(app)
-    for i in range(n):
-        h.submit_request(Request(f"r{i}", prompt_len=prompt,
-                                 max_new_tokens=max_new))
+    reqs = [Request(f"r{i}", prompt_len=prompt, max_new_tokens=max_new)
+            for i in range(n)]
+    for r in reqs:
+        h.submit_request(r)
     stats = h.run(max_steps=5000)
-    tokens = {rid: list(t) for rid, t in h.runner.generated.items()}
+    # completed requests own their tokens (runner state is evicted)
+    tokens = {r.req_id: list(r.output_tokens) for r in reqs
+              if r.output_tokens is not None}
     h.release()
     return stats, tokens
 
@@ -332,7 +337,7 @@ def test_paged_backend_preemption_readmission():
 
 def test_paged_backend_rejects_unsupported_arch():
     from repro.serving.model_runner import build_runner
-    cfg = reduced_config(get_config("gemma3-12b"))   # sliding-window blocks
+    cfg = reduced_config(get_config("zamba2-2.7b"))  # mamba/shared blocks
     with pytest.raises(ValueError, match="paged"):
         build_runner("paged", cfg)
     with pytest.raises(ValueError, match="backend"):
@@ -350,6 +355,155 @@ def test_failed_bind_leaks_neither_job_nor_pool_view():
                                          name="bad", backend="sparse"))
     assert not cluster.pod_pool("pod0").views, "orphan PoolView left behind"
     assert cluster.capacity() == cap0
+
+
+def test_page_groups_ring_accounting():
+    """Unit-level group accounting: local (ring) pages stop charging past
+    ``ceil(window/PAGE_SIZE)+1`` while the global table keeps growing,
+    and release returns both id spaces intact."""
+    cfg = reduced_config(get_config("gemma3-12b"))    # 5 local : 1 global
+    groups = PageGroups.from_config(cfg)
+    assert groups.local_layers == 5 and groups.global_layers == 1
+    ring = groups.ring_pages
+    assert ring == -(-cfg.sliding_window // PAGE_SIZE) + 1
+    pool = PagePool(32, policy="fixed", fixed_init_pages=1,
+                    fixed_step_pages=1, groups=groups)
+    r = Request("r", prompt_len=PAGE_SIZE, max_new_tokens=PAGE_SIZE * 8)
+    assert pool.try_admit(r)
+    assert len(r.pages) == 1 and len(r.local_pages) == 1
+    for step in range(8):                      # grow one page at a time
+        r.generated += PAGE_SIZE
+        assert pool.grow(r, horizon=1)
+        assert len(r.local_pages) <= ring, \
+            "ring must stop charging pages past ceil(window/PAGE)+1"
+    assert len(r.pages) == r.pages_needed(1) > ring
+    assert len(r.local_pages) == ring
+    # weighted utilization reflects the bounded rings, not the table
+    assert pool.utilization < len(r.pages) / pool.num_pages
+    pool.release(r)
+    assert sorted(pool.free) == list(range(32))
+    assert sorted(pool.free_local) == list(range(32))
+
+
+def test_paged_swa_matches_dense_tokens():
+    """Mixed global/sliding-window stack (reduced gemma3): the paged
+    backend's ring pages must produce the SAME tokens as the dense
+    backend, including after the generation wraps the ring (length
+    past ring_pages * PAGE_SIZE)."""
+    dense_stats, dense_toks = _serve_tokens("dense", arch="gemma3-12b",
+                                            n=2, prompt=200, max_new=70)
+    paged_stats, paged_toks = _serve_tokens("paged", arch="gemma3-12b",
+                                            n=2, prompt=200, max_new=70)
+    assert dense_stats["completed"] == paged_stats["completed"] == 2
+    assert dense_toks == paged_toks
+    assert all(len(t) == 71 for t in paged_toks.values())
+
+
+def test_paged_swa_ring_and_no_ring_tokens_identical():
+    """swa_rings=False (the benchmark's accounting baseline) keeps
+    decode windowed and token-identical; only the page charge differs."""
+    _, ring_toks = _serve_tokens("paged", arch="gemma3-12b", n=2,
+                                 prompt=200, max_new=70)
+    _, flat_toks = _serve_tokens("paged", arch="gemma3-12b", n=2,
+                                 prompt=200, max_new=70, swa_rings=False)
+    assert ring_toks == flat_toks
+
+
+def test_swa_ring_page_cap_long_generation():
+    """A long-generation request on a sliding-window stack holds at most
+    ``ring_pages`` pages on local layers while its global table grows
+    past them -- the acceptance bound of the ring design."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    h = cluster.submit(Application.serve("gemma3-12b", reduced=True,
+                                         max_batch=2, pool_pages=32,
+                                         backend="paged", policy="fixed"))
+    ring = h.runner.groups.ring_pages
+    req = Request("long", prompt_len=64, max_new_tokens=PAGE_SIZE * 3)
+    h.submit_request(req)
+    peak_local = peak_global = 0
+    while h.step()["alive"]:
+        peak_local = max(peak_local, len(req.local_pages))
+        peak_global = max(peak_global, len(req.pages))
+    assert peak_local <= ring
+    assert peak_global > ring, "scenario must outgrow the ring"
+    assert h.serving_stats()["completed"] == 1
+    view = h.engine.pool
+    assert view.used == 0 and view.used_local == 0
+    h.release()
+
+
+def test_paged_prefill_has_no_dense_detour():
+    """Native paged prefill: the runner must never call the model's
+    dense ``prefill(cache_len=...)`` path (the per-grant-size recompile
+    plus transient ``n_pages * PAGE_SIZE`` allocation it existed for)."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    h = cluster.submit(Application.serve("gemma3-12b", reduced=True,
+                                         max_batch=2, pool_pages=32,
+                                         backend="paged"))
+
+    def boom(*a, **k):
+        raise AssertionError("dense model.prefill called by PagedRunner")
+
+    h.runner.model.prefill = boom
+    h.submit_request(Request("r0", 200, 8))
+    stats = h.run(max_steps=500)
+    assert stats["completed"] == 1
+    h.release()
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_runner_state_evicted_on_completion(backend):
+    """Long-run leak regression: per-request runner state (generated
+    token lists, dense slots) must be evicted when requests complete --
+    the tokens move to ``req.output_tokens``."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         max_batch=4, pool_pages=32,
+                                         cache_len=512, backend=backend))
+    reqs = [Request(f"r{i}", 40, 5) for i in range(6)]
+    for r in reqs:
+        h.submit_request(r)
+    stats = h.run(max_steps=2000)
+    assert stats["completed"] == 6
+    assert h.runner.generated == {}, \
+        "completed requests must not accumulate in runner.generated"
+    if backend == "dense":
+        assert h.runner.slots == {}, "dense slots must drain too"
+    assert all(len(r.output_tokens) == 6 for r in reqs)
+    h.release()
+
+
+def test_paged_decode_compile_count_is_bounded():
+    """Bursty batches must NOT recompile decode per (batch, max_pages)
+    shape: the batch is padded to max_batch and the table width is
+    bucketed, so a run with varying running-set sizes triggers O(1)
+    compiles, not O(steps)."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0))
+    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
+                                         max_batch=4, pool_pages=64,
+                                         backend="paged"))
+    # batch size varies every few steps: 1 -> 3 -> 4 -> shrink as they
+    # finish; page grants vary with prompt length
+    h.submit_request(Request("a", 40, 30))
+    for _ in range(5):
+        h.step()
+    h.submit_request(Request("b", 200, 30))
+    h.submit_request(Request("c", 330, 30))
+    for _ in range(8):
+        h.step()
+    h.submit_request(Request("d", 64, 40))
+    stats = h.run(max_steps=2000)
+    assert stats["completed"] == 4
+    assert stats["decode_steps"] > 30
+    assert h.runner.decode_traces <= 3, \
+        f"decode recompiled {h.runner.decode_traces}x under bursty load"
+    # prefill compiles per prompt-page-count bucket, not per grant size
+    assert h.runner.prefill_traces <= 3
+    h.release()
 
 
 def test_engine_with_real_model(rng):
