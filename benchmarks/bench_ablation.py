@@ -11,7 +11,10 @@ Stages (TPU analog of the paper's static-DAG -> +resource graph ->
 Derived: estimated GiB/device + roofline-bound step time from profiles.
 """
 
-from benchmarks.common import row, timeit
+try:
+    from benchmarks.common import row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row, timeit
 from repro.configs import SHAPES, get_config
 from repro.core.history import HistoryStore
 from repro.core.materializer import (GB, SINGLE_POD,

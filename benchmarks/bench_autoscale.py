@@ -30,7 +30,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_json, row
+try:
+    from benchmarks.common import emit_json, row
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import emit_json, row
 from repro.core.history import HistoryStore
 from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.kv_cache import Request

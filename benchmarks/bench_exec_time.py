@@ -12,7 +12,10 @@ import glob
 import json
 import os
 
-from benchmarks.common import row
+try:
+    from benchmarks.common import row
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import block, row, timeit
+try:
+    from benchmarks.common import block, row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import block, row, timeit
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)

@@ -11,7 +11,10 @@ Derived column: percent memory saved at each input scale.
 
 import dataclasses
 
-from benchmarks.common import row, timeit
+try:
+    from benchmarks.common import row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row, timeit
 from repro.configs import SHAPES, get_config
 from repro.core.materializer import (GB, SINGLE_POD,
                                      estimate_bytes_per_device, materialize)

@@ -18,7 +18,10 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import row
+try:
+    from benchmarks.common import row
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

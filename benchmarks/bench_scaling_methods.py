@@ -18,7 +18,10 @@ same hardware constants as §Roofline (HBM 819 GB/s, PCIe-class host link
 
 import dataclasses
 
-from benchmarks.common import row, timeit
+try:
+    from benchmarks.common import row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row, timeit
 from repro.configs import SHAPES, get_config
 from repro.core import profiles as prof
 from repro.core.materializer import GB, SINGLE_POD, materialize

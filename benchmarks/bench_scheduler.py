@@ -7,7 +7,10 @@ Derived: scheduling ops/s vs the paper's claimed rates."""
 
 import argparse
 
-from benchmarks.common import emit_json, row
+try:
+    from benchmarks.common import emit_json, row
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import emit_json, row
 from repro.runtime import measure_cluster_throughput
 
 

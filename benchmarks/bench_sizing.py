@@ -9,7 +9,10 @@ Derived: mean utilization + mean completion time (the Fig. 22 axes).
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+try:
+    from benchmarks.common import row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row, timeit
 from repro.core.sizing import (fixed_sizing, peak_sizing, simulate_policy,
                                solve_init_step)
 

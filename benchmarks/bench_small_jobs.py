@@ -14,7 +14,10 @@ Derived: measured step wall time + working-set estimate.
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import block, row, timeit
+try:
+    from benchmarks.common import block, row, timeit
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import block, row, timeit
 from repro.configs import get_config
 from repro.core.materializer import (GB, SINGLE_POD, Plan,
                                      estimate_bytes_per_device)

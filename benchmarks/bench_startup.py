@@ -18,7 +18,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row
+try:
+    from benchmarks.common import row
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import row
 from repro.core.compile_cache import CompileCache, plan_layout_key
 from repro.core.materializer import SINGLE_POD, Plan
 

@@ -1,0 +1,205 @@
+"""CI perf-regression gate (bench-gate): diff smoke-run ``BENCH_*.json``
+artifacts against the committed baselines in ``benchmarks/baselines/``.
+
+Every benchmark row's ``derived`` string is a ``k=v;k=v`` record; the
+gate parses both sides and applies per-metric tolerance rules:
+
+* **exact** -- determinism proxies (completion counts, token parity,
+  store counts): any change fails.
+* **higher_worse / lower_worse** -- capacity and latency proxies (pool
+  utilization, TTFT in ticks, compile counts, the aliasing bytes ratio,
+  savings fractions): fail past a relative tolerance (default 25%) plus
+  a small absolute slack so near-zero baselines don't amplify noise.
+* everything else -- including ALL wall-clock metrics (``us_per_call``,
+  ``*_us``): reported as info only.  CI runners are far too noisy to
+  gate on microseconds; the gate covers the metrics that are functions
+  of the allocator/scheduler decisions, which are deterministic at
+  smoke scale.
+
+Run locally after a smoke pass::
+
+    PYTHONPATH=src python benchmarks/bench_serving_pipeline.py --smoke
+    python benchmarks/check_regression.py            # diff vs baselines
+    python benchmarks/check_regression.py --update   # refresh baselines
+
+Exit status 1 on any FAIL (regression, missing artifact, or missing
+baseline row) -- the CI bench-smoke job runs this after the smoke
+benchmarks, so a perf regression in the gated proxies blocks the PR.
+
+Stdlib-only on purpose: runs in any job without the jax stack.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINES = os.path.join(HERE, "baselines")
+DEFAULT_CURRENT = os.environ.get("BENCH_ARTIFACT_DIR", "artifacts/bench")
+
+#: rel_tol is the allowed fractional move in the WORSE direction;
+#: abs_slack is added on top (|delta| <= base*rel_tol + abs_slack passes).
+EXACT = ("completed", "token_parity", "tokens_match", "finished",
+         "restored", "kv_stores")
+
+
+def rule_for(metric: str):
+    """(kind, rel_tol, abs_slack) for a metric name, or None (info-only)."""
+    if metric in EXACT:
+        return ("exact", 0.0, 0.0)
+    if metric.endswith("_us") or metric == "us_per_call":
+        return None                       # wall clock: never gated
+    if "util" in metric:
+        return ("higher_worse", 0.25, 0.02)
+    if "ttft_ticks" in metric:
+        return ("higher_worse", 0.25, 0.05)
+    if metric in ("decode_compiles", "peak_local_pages"):
+        return ("higher_worse", 0.0, 1.0)
+    if metric == "kv_bytes_ratio":
+        return ("lower_worse", 0.25, 0.0)
+    if metric.endswith("_frac") or "saved" in metric:
+        return ("lower_worse", 0.25, 0.10)
+    return None
+
+
+def parse_derived(derived: str):
+    """``k=v;k=v`` -> {k: float} (percent strings normalized; non-numeric
+    values skipped)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.strip().rstrip("%")
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            pass
+    return out
+
+
+def load_rows(path: str):
+    """-> (rows, smoke_flag).  ``smoke`` comes from the artifact's extra
+    dict (None when the bench doesn't record it)."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {}
+    for r in payload.get("rows", []):
+        d = parse_derived(r.get("derived", ""))
+        d["us_per_call"] = float(r.get("us_per_call", 0.0))
+        rows[r["name"]] = d
+    return rows, payload.get("extra", {}).get("smoke")
+
+
+def check_metric(metric, base, cur):
+    """-> (status, note).  status in OK / FAIL / INFO."""
+    r = rule_for(metric)
+    if r is None:
+        return "INFO", ""
+    kind, rel, slack = r
+    if kind == "exact":
+        return ("OK", "") if cur == base else ("FAIL", "must match exactly")
+    worse = cur - base if kind == "higher_worse" else base - cur
+    allowed = abs(base) * rel + slack
+    if worse > allowed:
+        return "FAIL", f"worse by {worse:.3g} (allowed {allowed:.3g})"
+    return "OK", ""
+
+
+def compare(baseline_dir: str, current_dir: str) -> int:
+    names = sorted(f for f in os.listdir(baseline_dir)
+                   if f.startswith("BENCH_") and f.endswith(".json"))
+    if not names:
+        print(f"no baselines in {baseline_dir}", file=sys.stderr)
+        return 1
+    failures = 0
+    w = (28, 22, 10, 10, 8)
+    print(f"{'row':<{w[0]}} {'metric':<{w[1]}} {'base':>{w[2]}} "
+          f"{'current':>{w[3]}} {'status':<{w[4]}} note")
+    for fname in names:
+        cur_path = os.path.join(current_dir, fname)
+        print(f"-- {fname}")
+        if not os.path.exists(cur_path):
+            print(f"   MISSING current artifact {cur_path}")
+            failures += 1
+            continue
+        base_rows, base_smoke = load_rows(os.path.join(baseline_dir, fname))
+        cur_rows, cur_smoke = load_rows(cur_path)
+        if base_smoke != cur_smoke:
+            # a full-scale run diffed against smoke baselines (or vice
+            # versa) would fail every EXACT metric with misleading notes
+            print(f"   FAIL smoke flag mismatch: baseline smoke="
+                  f"{base_smoke} vs current smoke={cur_smoke} -- rerun "
+                  "the benchmarks with --smoke")
+            failures += 1
+            continue
+        for row_name, base in base_rows.items():
+            cur = cur_rows.get(row_name)
+            if cur is None:
+                print(f"{row_name:<{w[0]}} {'<row>':<{w[1]}} "
+                      f"{'':>{w[2]}} {'':>{w[3]}} {'FAIL':<{w[4]}} "
+                      "row missing from current run")
+                failures += 1
+                continue
+            for metric, bval in base.items():
+                if metric not in cur:
+                    if rule_for(metric) is not None:
+                        print(f"{row_name:<{w[0]}} {metric:<{w[1]}} "
+                              f"{bval:>{w[2]}.4g} {'--':>{w[3]}} "
+                              f"{'FAIL':<{w[4]}} gated metric disappeared")
+                        failures += 1
+                    continue
+                status, note = check_metric(metric, bval, cur[metric])
+                if status == "INFO" and bval == cur[metric]:
+                    continue              # keep the table readable
+                print(f"{row_name:<{w[0]}} {metric:<{w[1]}} "
+                      f"{bval:>{w[2]}.4g} {cur[metric]:>{w[3]}.4g} "
+                      f"{status:<{w[4]}} {note}")
+                if status == "FAIL":
+                    failures += 1
+    print(f"\nbench-gate: {'FAIL' if failures else 'OK'} "
+          f"({failures} regression(s))")
+    return 1 if failures else 0
+
+
+def update(baseline_dir: str, current_dir: str) -> int:
+    os.makedirs(baseline_dir, exist_ok=True)
+    copied = rc = 0
+    for f in sorted(os.listdir(current_dir)):
+        if not (f.startswith("BENCH_") and f.endswith(".json")):
+            continue
+        src = os.path.join(current_dir, f)
+        _, smoke = load_rows(src)
+        if smoke is False:
+            # full-scale artifacts must never become CI smoke baselines
+            print(f"REFUSED  {f}: recorded with smoke=False -- rerun the "
+                  "benchmark with --smoke before --update", file=sys.stderr)
+            rc = 1
+            continue
+        shutil.copyfile(src, os.path.join(baseline_dir, f))
+        print(f"baseline <- {f}")
+        copied += 1
+    if not copied:
+        print(f"no BENCH_*.json under {current_dir}", file=sys.stderr)
+        return 1
+    return rc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="directory with the fresh smoke artifacts")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="directory with the committed baselines")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current artifacts over the baselines")
+    args = ap.parse_args()
+    if args.update:
+        sys.exit(update(args.baselines, args.current))
+    sys.exit(compare(args.baselines, args.current))
+
+
+if __name__ == "__main__":
+    main()

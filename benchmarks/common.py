@@ -6,7 +6,14 @@ buffered so ``emit_json(bench)`` can persist the whole run as
 ``BENCH_<bench>.json`` under ``artifacts/bench/`` (override with
 ``$BENCH_ARTIFACT_DIR``) -- the machine-readable record CI uploads, so
 the perf trajectory is trackable across PRs instead of living in log
-scrollback."""
+scrollback.  ``benchmarks/check_regression.py`` diffs these artifacts
+against the committed baselines in ``benchmarks/baselines/`` (the CI
+bench-gate).
+
+Import note: drivers import this module as ``benchmarks.common`` with a
+``from common import ...`` fallback, so they run both as scripts
+(``PYTHONPATH=src python benchmarks/bench_x.py`` -- only ``benchmarks/``
+itself is on ``sys.path``) and as package modules (``run.py``, tests)."""
 
 import json
 import os

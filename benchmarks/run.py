@@ -2,8 +2,14 @@
 Prints ``name,us_per_call,derived`` CSV rows (deliverable d)."""
 
 import importlib
+import os
 import sys
 import traceback
+
+# runnable as `python benchmarks/run.py` with only src/ on PYTHONPATH:
+# the drivers are imported as the `benchmarks` package, which needs the
+# repo root importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 MODULES = [
     "benchmarks.bench_memory_adaptation",   # Fig 8 / 19

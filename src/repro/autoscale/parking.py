@@ -9,10 +9,12 @@ reclaims all three while keeping a warm restart cheap:
 
 1. the engine **drains**: every running request's pages go back to the
    (shared) pool without completing the request;
-2. the runner snapshots its device KV to **host** in the checkpointer's
-   array format (bf16 stored as uint16 + logical dtype, the exact
-   on-disk leaf encoding of ``repro.checkpoint``) and drops the device
-   arrays;
+2. the runner snapshots *the view's pages* of device KV to **host** in
+   the checkpointer's array format (bf16 stored as uint16 + logical
+   dtype, the exact on-disk leaf encoding of ``repro.checkpoint``); the
+   pool-sized device arrays are dropped only when no co-tenant aliases
+   them -- an aliased tenant's reclamation IS its physical pages
+   returning to the shared free list for co-tenants to reuse;
 3. the **scheduler** releases the job's bytes back to the pod,
    pre-marked as a low-priority reservation (§5.1.1) so unpark usually
    reacquires without re-placement -- and the freed capacity immediately
@@ -89,7 +91,9 @@ def park_app(handle) -> Dict:
         runner_state=runner_state, freed_bytes=freed_bytes,
         freed_pages=freed_pages, parked_at=time.monotonic())
     return {"freed_bytes": freed_bytes, "freed_pages": freed_pages,
-            "drained_requests": len(drained)}
+            "drained_requests": len(drained),
+            "kv_arrays_dropped": bool((runner_state or {}).get(
+                "arrays_dropped", runner_state is not None))}
 
 
 def unpark_app(handle) -> Dict:

@@ -106,6 +106,12 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     """q: (B, H, D); k/v_pages: (P, page, KV, D) pool; page_table:
     (B, max_pages) int32 (-1 padded); valid_len: (B,) total tokens.
 
+    Table entries are PHYSICAL page ids: the pool arrays may be a
+    pod-shared :class:`~repro.serving.model_runner.KVArrayStore` aliased
+    by several tenants, and only physical ids are unique across it --
+    callers translate view-local ids (``PoolView.to_physical``) before
+    building the table.
+
     ``window > 0`` masks keys outside the last ``window`` positions;
     ``ring=True`` additionally treats the table as a position-modular
     ring of ``max_pages`` pages (sliding-window layers' bounded tables).

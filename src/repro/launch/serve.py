@@ -38,6 +38,11 @@ def main():
                     help="paged backend: charge sliding-window layers "
                          "growing page tables instead of bounded rings "
                          "(accounting baseline; tokens are identical)")
+    ap.add_argument("--no-alias-kv", action="store_true",
+                    help="paged backend: give this tenant its own "
+                         "pool-sized device KV arrays instead of "
+                         "aliasing the pod's shared same-shape array "
+                         "set (benchmark baseline; tokens identical)")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
     ap.add_argument("--autoscale", action="store_true",
@@ -60,6 +65,7 @@ def main():
                                 pool_pages=128, policy=args.policy,
                                 backend=args.backend,
                                 swa_rings=not args.no_swa_rings,
+                                alias_kv=not args.no_alias_kv,
                                 private_pool=args.private_pool)
         prompt_rng = (8, 64)
         max_new = 16

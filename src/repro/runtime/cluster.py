@@ -121,6 +121,15 @@ class AppHandle:
             out["pool_used_local_pages"] = getattr(
                 pool, "used_local",
                 pool._local_space() - len(pool.free_local))
+        runner = self.runner
+        if runner is not None and getattr(runner, "store", None) is not None:
+            # live device bytes of this app's KV arrays (gauge).  Aliased
+            # same-shape tenants report the SAME store: dedupe by
+            # kv_store_key when summing across a pod (the pod-level total
+            # is shared_pool.kv_device_bytes below).
+            out["kv_device_bytes"] = runner.store.device_bytes()
+            out["kv_aliased"] = bool(getattr(runner, "shared_kv", False))
+            out["kv_store_key"] = runner.store.key
         shared = getattr(pool, "shared", None)
         if shared is not None:
             out["shared_pool"] = {
@@ -131,6 +140,7 @@ class AppHandle:
                 "preemptions_by_app": dict(shared.stats["preemptions"]),
                 "cross_app_preemptions":
                     shared.stats["cross_app_preemptions"],
+                "kv_device_bytes": shared.kv_device_bytes(),
             }
         out["windowed"] = False
         if since is not None:

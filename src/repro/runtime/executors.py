@@ -205,22 +205,41 @@ class JaxExecutor(Executor):
     default_pool_pages = 128
 
     def build_engine(self, handle: "AppHandle") -> ServingEngine:
-        from repro.serving.model_runner import build_runner
+        from repro.serving.model_runner import (KVArrayStore, PagedRunner,
+                                                build_runner, kv_shape_key)
 
         app = handle.app
         opts = app.options
         max_batch = int(opts.get("max_batch", 4))
+        backend = opts.get("backend", "dense")
+        use_rings = bool(opts.get("swa_rings", True))
         pool = self.build_pool(handle)
         try:
-            runner = build_runner(opts.get("backend", "dense"), app.config,
+            kv_store = None
+            if (backend == "paged"
+                    and getattr(pool, "shared", None) is not None
+                    and bool(opts.get("alias_kv", True))
+                    and all(k in PagedRunner.SUPPORTED_KINDS
+                            for k in app.config.pattern)):
+                # physical aliasing: every same-KV-shape paged tenant on
+                # this pod reads/writes ONE device page-array set, keyed
+                # by shape (mismatched shapes get their own store, i.e.
+                # fall back to private arrays; opts['alias_kv']=False
+                # opts out explicitly)
+                key = kv_shape_key(app.config, pool.physical_pages,
+                                   use_rings=use_rings)
+                kv_store = pool.shared.kv_store(
+                    key, lambda: KVArrayStore(key))
+                pool.bind_kv_store(kv_store)
+            runner = build_runner(backend, app.config,
                                   seed=self.seed, max_batch=max_batch,
                                   cache_len=int(opts.get("cache_len", 256)),
                                   pool_pages=pool.physical_pages,
-                                  use_rings=bool(opts.get("swa_rings",
-                                                          True)))
+                                  use_rings=use_rings, kv_store=kv_store)
         except Exception:
             # the pool view is already registered on the pod: an orphan
-            # would dilute every tenant's fair share forever
+            # would dilute every tenant's fair share forever (close also
+            # unbinds the kv store, dropping it with its last user)
             close = getattr(pool, "close", None)
             if close is not None:
                 close()

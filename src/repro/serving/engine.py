@@ -13,10 +13,12 @@ while the scheduler benchmarks drive a null executor with neither.
 
 Multi-tenancy: the ``pool`` may be a private
 :class:`~repro.serving.kv_cache.PagePool` or a
-:class:`~repro.serving.tenancy.PoolView` onto a pod-shared pool.  Under
-pressure the engine first asks the pool to arbitrate (``preempt_any`` --
-cross-app fair-share preemption), falling back to preempting its own
-newest request."""
+:class:`~repro.serving.tenancy.PoolView` onto a pod-shared pool (where
+requests carry view-local page ids and same-KV-shape tenants alias one
+physical device array set).  Under pressure the engine first asks the
+pool to arbitrate (``preempt_any`` -- cross-app fair-share preemption,
+which with aliasing moves *physical* pages between apps), falling back
+to preempting its own newest request."""
 
 from __future__ import annotations
 
@@ -155,9 +157,11 @@ class ServingEngine:
         completing it.  Returns (request, (global page ids, local ring
         page ids)) in running order -- the order matters, because unpark
         must rebuild ``running`` in the same order for batch-identical
-        decoding.  The page *contents* are untouched; the caller
+        decoding.  The ids are *physical* (``reclaim`` translates a
+        tenancy view's view-local ids before freeing them) and the page
+        *contents* are untouched; the caller
         (``repro.autoscale.parking``) snapshots them to host before the
-        ids are re-allocated."""
+        ids are re-allocated -- possibly by an aliased co-tenant."""
         drained = []
         for req in list(self.running):
             drained.append((req, self.pool.reclaim(req)))

@@ -198,6 +198,19 @@ class PagePool:
         """Hard page ceiling a single request can ever hold."""
         return self.num_pages
 
+    # -- id translation (overridden by tenancy.PoolView) ---------------------
+    def to_physical(self, ids: Sequence[int]) -> List[int]:
+        """Physical page ids backing ``ids``.  A private pool's page ids
+        ARE physical (they index the runner's own pool-sized arrays), so
+        this is the identity; a :class:`~repro.serving.tenancy.PoolView`
+        stores *view-local* ids on requests and remaps them here onto
+        the pod's shared device arrays."""
+        return list(ids)
+
+    def to_physical_local(self, ids: Sequence[int]) -> List[int]:
+        """Physical ids of local-group (sliding-window ring) pages."""
+        return list(ids)
+
     def admissible(self, req: Request) -> bool:
         """False when the request could NEVER complete under this pool's
         hard cap -- no sequence of grows or preemptions can serve it, so
@@ -303,15 +316,19 @@ class PagePool:
     def reclaim(self, req: Request) -> Tuple[List[int], List[int]]:
         """Return a request's pages WITHOUT completing it: no history
         sample (the request resumes with the same footprint) and no
-        'released' count.  Returns the (global, local-ring) page ids it
-        held, so the drained KV can be restored into freshly granted
-        pages on unpark."""
+        'released' count.  Returns the *physical* (global, local-ring)
+        page ids it held -- translated BEFORE the ids are freed, because
+        a PoolView forgets the remap on dealloc -- so the drained KV can
+        be gathered off-device and restored into freshly granted pages
+        on unpark."""
         held, req.pages = req.pages, []
         held_local, req.local_pages = req.local_pages, []
+        phys = self.to_physical(held)
+        phys_local = self.to_physical_local(held_local)
         self._dealloc(held)
         self._dealloc_local(held_local)
         req.state = "parked"
-        return held, held_local
+        return phys, phys_local
 
     def regrant(self, req: Request, n: int, n_local: int = 0) -> bool:
         """Unpark: re-grant exactly the drained page counts (the sizing
@@ -353,12 +370,18 @@ class PagePool:
                 / max(self.num_pages, 1))
 
 
-def page_table(requests: Sequence[Request], max_pages: int) -> np.ndarray:
-    """(B, max_pages) int32 page table (-1 padded) for the decode kernel."""
+def page_table(requests: Sequence[Request], max_pages: int,
+               pages: Optional[Sequence[Sequence[int]]] = None) -> np.ndarray:
+    """(B, max_pages) int32 page table (-1 padded) for the decode kernel.
+
+    ``pages`` overrides each request's id list -- the paged runner passes
+    the *physical* ids (``pool.to_physical``) here, since the kernel
+    indexes the device page arrays while requests carry view-local ids."""
     out = np.full((len(requests), max_pages), -1, np.int32)
     for i, r in enumerate(requests):
-        n = min(len(r.pages), max_pages)
-        out[i, :n] = r.pages[:n]
+        ids = r.pages if pages is None else pages[i]
+        n = min(len(ids), max_pages)
+        out[i, :n] = ids[:n]
     return out
 
 

@@ -23,7 +23,10 @@ Two implementations:
   Mixed global/sliding-window stacks (gemma3-style) are supported:
   ATTN_LOCAL layers keep a fixed *ring* of ``ceil(window/PAGE_SIZE)+1``
   pages per request (see :class:`~repro.serving.kv_cache.PageGroups`)
-  while global layers keep the growing table.
+  while global layers keep the growing table.  The device page arrays
+  live in a :class:`KVArrayStore`; same-KV-shape tenants on one pod
+  alias ONE store (physical sharing), with requests carrying view-local
+  page ids remapped to physical ids at kernel time.
 
 Compile discipline (long-run serving must not recompile per step):
 
@@ -44,7 +47,7 @@ outputs nondeterministic across runs.
 from __future__ import annotations
 
 import zlib
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +65,75 @@ from repro.serving.kv_cache import (PAGE_SIZE, PageGroups, Request,
                                     page_table)
 
 KV_DTYPE = jnp.bfloat16
+
+
+def kv_shape_key(cfg: ModelConfig, pool_pages: int, *,
+                 use_rings: bool = True) -> Tuple:
+    """KV shape signature deciding which paged tenants may alias one
+    physical device array set: layer count, pool geometry, KV head
+    layout, dtype, and (when rings are on) WHICH layers are rings --
+    ring layers are indexed from the local id space, so a ring tenant
+    and a no-ring tenant of the same config must not share arrays."""
+    groups = PageGroups.from_config(cfg)
+    rings = bool(use_rings) and groups.local_layers > 0
+    return (cfg.num_blocks * len(cfg.pattern), int(pool_pages), PAGE_SIZE,
+            cfg.num_kv_heads, cfg.head_dim, jnp.dtype(KV_DTYPE).name,
+            tuple(k == ATTN_LOCAL for k in cfg.pattern) if rings else None)
+
+
+class KVArrayStore:
+    """One pod's physical KV page arrays for one KV shape: the aliasing
+    unit of multi-tenant serving.
+
+    Registered on the pod's :class:`~repro.serving.tenancy.SharedPagePool`
+    keyed by :func:`kv_shape_key`; every same-shape paged tenant's
+    :class:`PagedRunner` reads and writes THESE arrays (per-layer
+    ``(pool_pages + 1, PAGE_SIZE, KV, hd)``, last slot = shared trash
+    page), indexed by pod-unique physical page ids.  N same-model
+    tenants therefore cost ONE pool of device HBM instead of N -- the
+    pool's accounted footprint and the live footprint finally coincide.
+
+    The arrays are engine-owned state, not any single runner's: jitted
+    prefill/decode still donate them (in-place XLA updates), but each
+    runner writes the donated result back here so co-tenants observe it.
+    ``free_local`` is the shared physical id space for sliding-window
+    ring pages (local-attention layers' arrays are shared too); it is
+    None for shapes without rings.
+    """
+
+    def __init__(self, key: Tuple):
+        (num_layers, pool_pages, page, kvh, hd, dtype, ring_pat) = key
+        self.key = key
+        self.num_layers = num_layers
+        self.dtype = dtype
+        self.page_shape = (pool_pages + 1, page, kvh, hd)
+        self.k_pages: Optional[List[jax.Array]] = None
+        self.v_pages: Optional[List[jax.Array]] = None
+        self.free_local: Optional[List[int]] = (
+            list(range(pool_pages)) if ring_pat and any(ring_pat) else None)
+        self.users: set = set()     # app names aliasing this store
+        self.ensure_arrays()
+
+    def ensure_arrays(self) -> None:
+        """(Re)materialize the device arrays -- parking the sole tenant
+        drops them, and a later same-shape tenant (or unpark) needs them
+        back."""
+        if self.k_pages is None:
+            self.k_pages = [jnp.zeros(self.page_shape, self.dtype)
+                            for _ in range(self.num_layers)]
+            self.v_pages = [jnp.zeros(self.page_shape, self.dtype)
+                            for _ in range(self.num_layers)]
+
+    def drop_arrays(self) -> None:
+        self.k_pages = None
+        self.v_pages = None
+
+    def device_bytes(self) -> int:
+        """Live device bytes of the page arrays (0 while parked-dropped)."""
+        if self.k_pages is None:
+            return 0
+        return sum(int(a.nbytes) for a in self.k_pages) + \
+            sum(int(a.nbytes) for a in self.v_pages)
 
 
 def synth_prompt(req_id: str, prompt_len: int, vocab: int) -> jax.Array:
@@ -232,13 +304,15 @@ class PagedRunner(ModelRunner):
     absolute position.  Other block kinds (SSM state, MoE, cross
     attention) keep the dense backend until they grow paged layouts.
 
-    Device-memory note: each runner holds its OWN page arrays sized to
-    the physical pool (tenants run different models, so their KV arrays
-    cannot alias); the last page (index ``pool_pages``) is a write-only
-    trash page for padded batch lanes.  The pod's
-    :class:`SharedPagePool` bounds the *accounted* combined footprint;
-    true on-device sharing of one array set across same-model tenants
-    needs a view-local page-id remap (ROADMAP).
+    Device-memory note: the page arrays live in a :class:`KVArrayStore`
+    -- pass ``kv_store=`` (the pod's registered store for this KV shape)
+    and every same-shape tenant reads/writes ONE device allocation;
+    without it the runner builds a private store (mismatched-shape and
+    ``alias_kv=False`` tenants).  Requests carry view-local page ids; at
+    kernel time the runner translates them through the engine pool's
+    ``to_physical`` remap, so the kernel always indexes the arrays by
+    pod-unique physical ids.  The last slot (index ``pool_pages``) is a
+    write-only trash page for padded batch lanes.
     """
 
     backend = "paged"
@@ -247,7 +321,8 @@ class PagedRunner(ModelRunner):
 
     def __init__(self, cfg: ModelConfig, *, seed: int = 0,
                  pool_pages: int = 128, max_batch: int = 4,
-                 use_rings: bool = True):
+                 use_rings: bool = True,
+                 kv_store: Optional[KVArrayStore] = None):
         super().__init__()
         if (any(k not in self.SUPPORTED_KINDS for k in cfg.pattern)
                 or cfg.rope_theta <= 0 or cfg.is_encdec
@@ -267,11 +342,16 @@ class PagedRunner(ModelRunner):
         self.num_layers = nb * pat
         self.pool_pages = pool_pages
         self.trash_page = pool_pages            # padded lanes write here
-        self.page_shape = (pool_pages + 1, PAGE_SIZE, cfg.num_kv_heads,
-                           cfg.head_dim)
-        shape = self.page_shape
-        self.k_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
-        self.v_pages = [jnp.zeros(shape, KV_DTYPE) for _ in range(nb * pat)]
+        key = kv_shape_key(cfg, pool_pages, use_rings=self.use_rings)
+        if kv_store is not None and kv_store.key != key:
+            raise ValueError(
+                f"kv_store shape mismatch for {cfg.name}: store key "
+                f"{kv_store.key} != runner key {key} -- mismatched-shape "
+                "tenants must fall back to private arrays")
+        self.shared_kv = kv_store is not None
+        self.store = kv_store if kv_store is not None else KVArrayStore(key)
+        self.store.ensure_arrays()      # a parked-dropped store revives
+        self.page_shape = self.store.page_shape
         # the Pallas kernel natively on TPU; its jnp oracle elsewhere (the
         # interpreted kernel is validated against the oracle in
         # tests/test_kernels.py, and is ~60x slower than the oracle on CPU)
@@ -287,6 +367,27 @@ class PagedRunner(ModelRunner):
         self._decode = jax.jit(self._decode_fn, donate_argnums=(9, 10))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(6, 7))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0, 1))
+
+    # the arrays live on the (possibly pod-shared) store; runner code and
+    # tests read them through these aliases
+    @property
+    def k_pages(self) -> Optional[List[jax.Array]]:
+        return self.store.k_pages
+
+    @property
+    def v_pages(self) -> Optional[List[jax.Array]]:
+        return self.store.v_pages
+
+    # -- view-local -> physical id translation -------------------------------
+    def _phys(self, ids: List[int]) -> List[int]:
+        """Physical ids of a request's global-table pages (identity for a
+        private pool; the PoolView remap for pod-shared tenancy)."""
+        pool = self.engine.pool if self.engine is not None else None
+        return pool.to_physical(ids) if pool is not None else list(ids)
+
+    def _phys_local(self, ids: List[int]) -> List[int]:
+        pool = self.engine.pool if self.engine is not None else None
+        return pool.to_physical_local(ids) if pool is not None else list(ids)
 
     def _layer_kind(self, layer: int) -> str:
         return self.cfg.pattern[layer % len(self.cfg.pattern)]
@@ -371,23 +472,23 @@ class PagedRunner(ModelRunner):
         if pad:
             toks = jnp.pad(toks, ((0, 0), (0, pad)))
         if req.pages:
-            g_ids = np.asarray(req.pages[:n_pg], np.int32)
+            g_ids = np.asarray(self._phys(req.pages[:n_pg]), np.int32)
         else:                               # pure-local stack: unused
             g_ids = np.full(n_pg, self.trash_page, np.int32)
         if self.use_rings:
             ring = self.groups.ring_pages
             # the last min(ring, n_pg) prompt pages survive, each at ring
             # slot (page % ring) -- consecutive pages hit distinct slots
+            lp = self._phys_local(req.local_pages)
             l_src = np.arange(max(0, n_pg - ring), n_pg, dtype=np.int32)
-            l_ids = np.asarray([req.local_pages[j % ring] for j in l_src],
-                               np.int32)
+            l_ids = np.asarray([lp[j % ring] for j in l_src], np.int32)
         else:
             l_src = np.zeros(0, np.int32)
             l_ids = np.zeros(0, np.int32)
-        nxt, self.k_pages, self.v_pages = self._prefill(
+        nxt, self.store.k_pages, self.store.v_pages = self._prefill(
             self.params, toks, jnp.asarray(req.prompt_len - 1, jnp.int32),
             jnp.asarray(g_ids), jnp.asarray(l_ids), jnp.asarray(l_src),
-            self.k_pages, self.v_pages)
+            self.store.k_pages, self.store.v_pages)
         self.generated[req.req_id] = [int(nxt)]
 
     # -- decode --------------------------------------------------------------
@@ -447,8 +548,14 @@ class PagedRunner(ModelRunner):
         # batch is padded to max_batch: idle lanes write into the trash
         # page with an all-masked table, so the compile key is constant
         # in batch size; the table width is bucketed to the next power of
-        # two so a growing widest-grant re-buckets O(log pool) times
-        maxp_b = _next_pow2(max(max(len(r.pages) for r in running), 1))
+        # two so a growing widest-grant re-buckets O(log pool) times.
+        # Tables and write slots carry PHYSICAL ids (requests hold
+        # view-local ones): the kernel indexes the possibly pod-shared
+        # device arrays, where only physical ids are unique.
+        g_phys = [self._phys(r.pages) for r in running]
+        l_phys = ([self._phys_local(r.local_pages) for r in running]
+                  if self.use_rings else [[] for _ in running])
+        maxp_b = _next_pow2(max(max(len(p) for p in g_phys), 1))
         toks = np.zeros((b, 1), np.int32)
         positions = np.zeros((b, 1), np.int32)
         offs = np.zeros(b, np.int32)
@@ -456,7 +563,7 @@ class PagedRunner(ModelRunner):
         phys_g = np.full(b, self.trash_page, np.int32)
         phys_l = np.full(b, self.trash_page, np.int32)
         table_g = np.full((b, maxp_b), -1, np.int32)
-        table_g[:len(running)] = page_table(running, maxp_b)
+        table_g[:len(running)] = page_table(running, maxp_b, pages=g_phys)
         table_l = np.full((b, ring), -1, np.int32)
         for i, (r, p) in enumerate(zip(running, pos)):
             toks[i, 0] = self.generated[r.req_id][-1]
@@ -464,26 +571,29 @@ class PagedRunner(ModelRunner):
             offs[i] = p % PAGE_SIZE
             vlen[i] = p + 1
             if r.pages:
-                phys_g[i] = r.pages[p // PAGE_SIZE]
+                phys_g[i] = g_phys[i][p // PAGE_SIZE]
             if self.use_rings:
-                phys_l[i] = r.local_pages[(p // PAGE_SIZE) % ring]
-                table_l[i, :len(r.local_pages)] = r.local_pages
-        nxt, self.k_pages, self.v_pages = self._decode(
+                phys_l[i] = l_phys[i][(p // PAGE_SIZE) % ring]
+                table_l[i, :len(l_phys[i])] = l_phys[i]
+        nxt, self.store.k_pages, self.store.v_pages = self._decode(
             self.params, jnp.asarray(toks), jnp.asarray(positions),
             jnp.asarray(phys_g), jnp.asarray(phys_l), jnp.asarray(offs),
             jnp.asarray(table_g), jnp.asarray(table_l), jnp.asarray(vlen),
-            self.k_pages, self.v_pages)
+            self.store.k_pages, self.store.v_pages)
         nxt = np.asarray(nxt)
         for i, req in enumerate(running):
             self.generated[req.req_id].append(int(nxt[i]))
 
     # -- parking -------------------------------------------------------------
     def park(self, drained):
-        """Gather each drained request's KV pages to host (per layer
-        group: one (layers, n_pages, PAGE, KV, hd) array for the growing
-        tables and one for the rings, page ids dropped -- unpark scatters
-        into whatever fresh ids are granted) and free the pool-sized
-        device arrays, the bulk of a serve app's HBM footprint."""
+        """Snapshot ONLY the view's pages: gather each drained request's
+        KV to host (per layer group: one (layers, n_pages, PAGE, KV, hd)
+        array for the growing tables and one for the rings -- ``drained``
+        carries the *physical* ids ``reclaim`` translated before
+        freeing).  The pool-sized device arrays are dropped only when no
+        co-tenant still decodes through the shared store: an aliased
+        tenant's real reclamation is its pages returning to the shared
+        free list, where the co-tenants immediately reuse them."""
         state = super().park(drained)
         table_layers = [l for l in range(self.num_layers)
                         if not self._layer_ring(l)]
@@ -503,25 +613,33 @@ class PagedRunner(ModelRunner):
             kv[req.req_id] = {"g": gather(table_layers, g_ids),
                               "l": gather(ring_layers, l_ids)}
         state["kv"] = kv
-        self.k_pages = None
-        self.v_pages = None
+        # drop the device arrays unless a co-tenant still decodes through
+        # them: a PARKED co-tenant doesn't count (its KV is already
+        # snapshotted to host, and unpark revives the arrays), so the
+        # last active tenant to park takes the pool's HBM with it
+        pool = self.engine.pool if self.engine is not None else None
+        own = getattr(pool, "app", None)
+        views = getattr(getattr(pool, "shared", None), "views", {})
+        sole = all(getattr(views.get(u), "parked", False)
+                   for u in self.store.users if u != own)
+        if sole:
+            self.store.drop_arrays()
+        state["arrays_dropped"] = sole
         return state
 
     def unpark(self, state, restored):
         super().unpark(state, restored)
-        self.k_pages = [jnp.zeros(self.page_shape, KV_DTYPE)
-                        for _ in range(self.num_layers)]
-        self.v_pages = [jnp.zeros(self.page_shape, KV_DTYPE)
-                        for _ in range(self.num_layers)]
+        self.store.ensure_arrays()      # no-op when co-tenants kept them
         table_layers = [l for l in range(self.num_layers)
                         if not self._layer_ring(l)]
         ring_layers = [l for l in range(self.num_layers)
                        if self._layer_ring(l)]
         for req in restored:
             saved = state["kv"][req.req_id]
-            for layers, ids, packed in ((table_layers, req.pages,
+            for layers, ids, packed in ((table_layers, self._phys(req.pages),
                                          saved["g"]),
-                                        (ring_layers, req.local_pages,
+                                        (ring_layers,
+                                         self._phys_local(req.local_pages),
                                          saved["l"])):
                 if packed is None:
                     continue
@@ -530,21 +648,24 @@ class PagedRunner(ModelRunner):
                 v = jnp.asarray(_from_saved(va, vd))
                 pages = jnp.asarray(ids, jnp.int32)
                 for li, layer in enumerate(layers):
-                    self.k_pages[layer], self.v_pages[layer] = self._scatter(
-                        self.k_pages[layer], self.v_pages[layer], pages,
-                        k[li], v[li])
+                    (self.store.k_pages[layer],
+                     self.store.v_pages[layer]) = self._scatter(
+                        self.store.k_pages[layer],
+                        self.store.v_pages[layer], pages, k[li], v[li])
 
 
 def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,
                  max_batch: int = 4, cache_len: int = 256,
-                 pool_pages: int = 128,
-                 use_rings: bool = True) -> ModelRunner:
-    """Factory keyed by ``Application.options['backend']``."""
+                 pool_pages: int = 128, use_rings: bool = True,
+                 kv_store: Optional[KVArrayStore] = None) -> ModelRunner:
+    """Factory keyed by ``Application.options['backend']``.  ``kv_store``
+    aliases the paged backend onto the pod's shared device arrays."""
     if backend == "dense":
         return DenseRunner(cfg, seed=seed, max_batch=max_batch,
                            cache_len=cache_len)
     if backend == "paged":
         return PagedRunner(cfg, seed=seed, pool_pages=pool_pages,
-                           max_batch=max_batch, use_rings=use_rings)
+                           max_batch=max_batch, use_rings=use_rings,
+                           kv_store=kv_store)
     raise ValueError(f"unknown serving backend {backend!r} "
                      "(expected 'dense' or 'paged')")

@@ -17,6 +17,16 @@ instantiation of that claim:
   grant policy), but physical pages come from the shared pool and are
   capped by the view's quota.
 
+Physical aliasing: requests on a PoolView carry *view-local* page ids;
+the view owns a logical->physical remap onto ids drawn from the shared
+free list.  Same-KV-shape paged tenants bind one
+:class:`~repro.serving.model_runner.KVArrayStore` (registered here per
+shape key) and so read/write the pod's ONE device page-array set --
+preemption, ``resize_quota`` shrink, and parking move *real* pages
+between applications, not just accounting.  The remap is also the
+isolation boundary: translating an id the view no longer owns raises,
+so no tenant can read a page that was reclaimed from it.
+
 Quotas: ``quota`` may be an explicit page count (hard cap), the string
 ``"fair"`` (dynamic weighted fair share, recomputed as tenants come and
 go), or None (work-conserving: an idle pool may be fully consumed by one
@@ -27,7 +37,7 @@ the §9.3 sizing program, keyed by the view's app name.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.history import HistoryStore
 from repro.serving.kv_cache import PageGroups, PagePool
@@ -44,6 +54,9 @@ class SharedPagePool:
         self.views: Dict[str, "PoolView"] = {}
         self.stats = {"preemptions": {}, "cross_app_preemptions": 0,
                       "denials": {}}
+        # physical KV device-array sets, one per KV shape signature: every
+        # same-shape paged tenant aliases the same arrays (see kv_store)
+        self.kv_stores: Dict[Tuple, object] = {}
 
     # -- tenancy ------------------------------------------------------------
     def view(self, app: str, *,
@@ -77,6 +90,25 @@ class SharedPagePool:
 
     def _give(self, pages: List[int]) -> None:
         self.free.extend(pages)
+
+    # -- physical KV device arrays (same-shape tenant aliasing) --------------
+    def kv_store(self, key: Tuple, factory: Callable[[], object]) -> object:
+        """The pod's single physical KV array set for ``key`` (a KV shape
+        signature -- see :func:`repro.serving.model_runner.kv_shape_key`).
+        Created by ``factory`` on the first same-shape paged tenant and
+        aliased by every later one; dropped when the last aliasing view
+        closes.  Tenants whose shape has no registered twin simply get a
+        fresh store: mismatched-shape tenants therefore never alias."""
+        st = self.kv_stores.get(key)
+        if st is None:
+            st = factory()
+            self.kv_stores[key] = st
+        return st
+
+    def kv_device_bytes(self) -> int:
+        """Live device bytes of every registered KV array store (the pod's
+        REAL paged-KV HBM footprint, as opposed to the accounted pages)."""
+        return sum(int(st.device_bytes()) for st in self.kv_stores.values())
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -131,6 +163,15 @@ class PoolView(PagePool):
     Engine-compatible: grants and releases go through the PagePool logic
     (history-driven sizing per app), but the physical free list belongs to
     the shared pool and allocation is denied beyond this view's quota.
+
+    Requests on a view hold **view-local** page ids; ``_remap`` (and
+    ``_remap_local`` for sliding-window rings) translates them to the
+    physical ids actually drawn from the shared free list.  The paged
+    runner calls :meth:`to_physical` at kernel time, so when same-shape
+    tenants alias one :class:`KVArrayStore` the device page arrays are
+    indexed by pod-unique physical ids while each app's page tables stay
+    in its own id space.  Translation of an id the view no longer owns
+    raises -- the isolation guard preemption and quota shrink rely on.
     """
 
     def __init__(self, shared: SharedPagePool, app: str, *,
@@ -150,13 +191,22 @@ class PoolView(PagePool):
         self.parked = False             # set by repro.autoscale.parking
         self.free = []                  # unused: physical list is shared
         self._denial_cause = "physical"
+        # view-local id space: requests see small stable ids, the view
+        # remembers which physical page backs each (recycled on dealloc)
+        self.kv_store = None            # bound via bind_kv_store (aliasing)
+        self._remap: Dict[int, int] = {}
+        self._remap_local: Dict[int, int] = {}
+        self._free_ids: List[int] = []
+        self._free_ids_local: List[int] = []
+        self._next_id = 0
+        self._next_id_local = 0
         if groups is not None:
             self.set_groups(groups)
 
     def _local_space(self) -> int:
-        # the local (ring) id space indexes the app's OWN pool-sized
-        # per-layer arrays; its size is the pod pool's physical size, not
-        # this view's (dynamic) quota
+        # the local (ring) physical space indexes pool-sized per-layer
+        # arrays (shared store's or the app's own); its size is the pod
+        # pool's physical size, not this view's (dynamic) quota
         return self.shared.num_pages
 
     # -- quota --------------------------------------------------------------
@@ -178,7 +228,10 @@ class PoolView(PagePool):
         Shrinking below current usage drains the overage through the
         engine's normal preemption path -- preempted requests release
         their pages to the shared pool and re-queue (at-least-once), so
-        pages are never stranded on an over-quota view.  Returns the
+        pages are never stranded on an over-quota view.  When the view
+        aliases a shared KV array store the drained pages are *physical*:
+        they become grantable to co-tenants in the same tick, and this
+        view's remap forgets them (reading one raises).  Returns the
         number of requests preempted by the shrink."""
         self._quota = quota
         preempted = 0
@@ -194,6 +247,64 @@ class PoolView(PagePool):
             self._note_denial()
         return ok
 
+    # -- view-local id space -------------------------------------------------
+    def _new_ids(self, n: int, local: bool = False) -> List[int]:
+        """n fresh view-local ids (recycled before the counter grows, so
+        the id space stays as small as the view's peak usage)."""
+        free = self._free_ids_local if local else self._free_ids
+        ids = []
+        for _ in range(n):
+            if free:
+                ids.append(free.pop())
+            elif local:
+                ids.append(self._next_id_local)
+                self._next_id_local += 1
+            else:
+                ids.append(self._next_id)
+                self._next_id += 1
+        return ids
+
+    def to_physical(self, ids: Sequence[int]) -> List[int]:
+        """Physical page ids backing the view-local ``ids``.  Raises on
+        any id this view does not currently own -- after preemption,
+        quota shrink, or parking the physical page may already belong to
+        a co-tenant, and reading it would leak another app's KV."""
+        try:
+            return [self._remap[v] for v in ids]
+        except KeyError as e:
+            raise KeyError(
+                f"view {self.app!r} does not own page id {e.args[0]}: the "
+                "physical page was reclaimed (isolation guard)") from None
+
+    def to_physical_local(self, ids: Sequence[int]) -> List[int]:
+        try:
+            return [self._remap_local[v] for v in ids]
+        except KeyError as e:
+            raise KeyError(
+                f"view {self.app!r} does not own ring page id {e.args[0]}: "
+                "the physical page was reclaimed (isolation guard)") from None
+
+    # -- physical KV array aliasing ------------------------------------------
+    def bind_kv_store(self, store) -> None:
+        """Alias this view onto the pod's shared device arrays for its KV
+        shape (a :class:`~repro.serving.model_runner.KVArrayStore` from
+        ``SharedPagePool.kv_store``).  Ring (local-group) pages then come
+        from the store's shared local free list instead of a per-view
+        space, since the local-layer arrays are shared too.  Must happen
+        before any page is granted: the local id spaces differ."""
+        if self.used or self.used_local:
+            raise RuntimeError(
+                f"view {self.app!r}: bind_kv_store with pages outstanding")
+        self.kv_store = store
+        store.users.add(self.app)
+
+    def _local_free(self) -> Optional[List[int]]:
+        """The physical free list ring pages draw from: the aliased
+        store's shared one, else this view's private space."""
+        if self.kv_store is not None and self.kv_store.free_local is not None:
+            return self.kv_store.free_local
+        return self.free_local
+
     # -- physical allocation via the shared pool ----------------------------
     def _alloc(self, n: int) -> Optional[List[int]]:
         if self.used + n > self.quota:
@@ -206,34 +317,46 @@ class PoolView(PagePool):
             self._note_denial()
             return None
         self.used += n
-        return got
+        ids = self._new_ids(n)
+        for vid, pid in zip(ids, got):
+            self._remap[vid] = pid
+        return ids
 
     def _dealloc(self, pages: List[int]) -> None:
         self.used -= len(pages)
-        self.shared._give(pages)
+        phys = [self._remap.pop(v) for v in pages]
+        self._free_ids.extend(pages)
+        self.shared._give(phys)
 
     def _alloc_local(self, n: int) -> Optional[List[int]]:
-        """Ring pages come from the view's OWN id space (they index the
-        app's private per-layer arrays, not the pod-shared global ones)
-        but still count against this view's quota: the quota caps each
-        layer group's table independently."""
-        if self.free_local is None:
+        """Ring pages index the local-attention layers' arrays -- the
+        aliased store's shared ones, else the app's private set -- and
+        still count against this view's quota: the quota caps each layer
+        group's table independently."""
+        src = self._local_free()
+        if src is None:
             return None
         if self.used_local + n > self.quota:
             self._denial_cause = "quota"
             self._note_denial()
             return None
-        if n > len(self.free_local):
+        if n > len(src):
             self._denial_cause = "physical"
             self._note_denial()
             return None
         self.used_local += n
-        return [self.free_local.pop() for _ in range(n)]
+        got = [src.pop() for _ in range(n)]
+        ids = self._new_ids(n, local=True)
+        for vid, pid in zip(ids, got):
+            self._remap_local[vid] = pid
+        return ids
 
     def _dealloc_local(self, pages: List[int]) -> None:
         if pages:
             self.used_local -= len(pages)
-            self.free_local.extend(pages)
+            phys = [self._remap_local.pop(v) for v in pages]
+            self._free_ids_local.extend(pages)
+            self._local_free().extend(phys)
 
     def _note_denial(self) -> None:
         d = self.shared.stats["denials"]
@@ -253,8 +376,22 @@ class PoolView(PagePool):
         return self.shared.preempt_for(self)
 
     def close(self) -> None:
-        """Detach this app from the pod pool (on application release)."""
+        """Detach this app from the pod pool (on application release).
+        The last aliasing tenant of a KV array store takes the store --
+        and its device HBM -- with it."""
         self.engine = None
+        if self.kv_store is not None:
+            st = self.kv_store
+            st.users.discard(self.app)
+            if not st.users:
+                self.shared.kv_stores.pop(st.key, None)
+            elif all(getattr(self.shared.views.get(u), "parked", False)
+                     for u in st.users):
+                # every remaining tenant is parked (KV on host): the
+                # store stays registered for their unpark to revive, but
+                # its device HBM must not sit idle meanwhile
+                st.drop_arrays()
+            self.kv_store = None
         self.shared.views.pop(self.app, None)
 
     # -- accounting ---------------------------------------------------------

@@ -1,0 +1,274 @@
+"""Physically shared KV: view-local page-id remap + same-shape tenants
+aliasing one device page-array set (KVArrayStore).
+
+Covers the aliasing acceptance criteria: same-model tenants share ONE
+physical allocation with token-exact parity to private arrays, mismatched
+shapes fall back to their own store, quota shrink / preemption move
+*physical* pages between apps in the same tick, the remap is an isolation
+boundary (a view cannot read a page it no longer owns), and park/unpark
+snapshots only the view's pages without yanking co-tenants' arrays.
+"""
+
+import pytest
+
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, JaxExecutor
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PAGE_SIZE, Request
+from repro.serving.tenancy import SharedPagePool
+
+
+# ---------------------------------------------------------------------------
+# unit level: the remap itself (no jax, no model)
+# ---------------------------------------------------------------------------
+
+def test_poolview_remap_isolation():
+    """Requests hold view-local ids; physical ids come from the shared
+    free list; translating an id the view no longer owns raises; freed
+    physical pages become grantable to the co-tenant."""
+    shared = SharedPagePool(8)
+    a = shared.view("a", policy="fixed", fixed_init_pages=1)
+    b = shared.view("b", policy="fixed", fixed_init_pages=1)
+    ra = Request("ra", PAGE_SIZE * 2 - 4, 4)          # 2 pages
+    assert a.try_admit(ra)
+    ids = list(ra.pages)
+    phys = a.to_physical(ids)
+    assert len(set(phys)) == 2
+    assert set(phys).isdisjoint(shared.free), \
+        "held physical ids must not be on the shared free list"
+    a.release(ra)
+    with pytest.raises(KeyError, match="does not own"):
+        a.to_physical(ids)
+    rb = Request("rb", PAGE_SIZE * 2 - 4, 4)
+    assert b.try_admit(rb)
+    assert set(b.to_physical(rb.pages)) & set(phys), \
+        "freed physical pages must be grantable to the co-tenant"
+    # view-local ids are recycled, not leaked upward forever
+    rc = Request("rc", PAGE_SIZE - 4, 4)
+    assert a.try_admit(rc)
+    assert set(rc.pages) <= set(ids), "freed view-local ids are recycled"
+
+
+def test_resize_quota_shrink_moves_physical_pages_to_cotenant():
+    """Satellite: shrink-below-usage on an aliased view drains *physical*
+    pages -- the freed ids are grantable to the co-tenant in the same
+    tick, and the shrunk view can no longer read them."""
+    shared = SharedPagePool(4)
+    a = shared.view("a", policy="fixed", fixed_init_pages=1,
+                    fixed_step_pages=1)
+    b = shared.view("b", policy="fixed", fixed_init_pages=1,
+                    fixed_step_pages=1)
+    ea = ServingEngine(a, max_batch=4)
+    eb = ServingEngine(b, max_batch=4)
+    for i in range(2):                                # 2 pages each
+        ea.submit(Request(f"a{i}", PAGE_SIZE * 2 - 4, 8))
+    ea.step()
+    assert a.used == 4 and len(shared.free) == 0
+    held = {r.req_id: (list(r.pages), a.to_physical(r.pages))
+            for r in ea.running}
+    preempted = a.resize_quota(2)
+    assert preempted == 1 and a.used == 2
+    victim = next(r for r in list(ea.queue) if r.state == "queued")
+    old_ids, old_phys = held[victim.req_id]
+    assert sorted(shared.free) == sorted(old_phys), \
+        "the drained pages must be the victim's physical ids"
+    with pytest.raises(KeyError, match="does not own"):
+        a.to_physical(old_ids)
+    # same tick: the co-tenant's grant is served from the freed ids
+    eb.submit(Request("big", PAGE_SIZE * 2 - 4, 8))
+    eb.step()
+    assert len(eb.running) == 1
+    got = set(b.to_physical(eb.running[0].pages))
+    assert got == set(old_phys)
+    # combined accounting still exact
+    assert a.used + b.used == shared.used_pages
+
+
+def test_reclaim_returns_physical_ids():
+    """Park support: reclaim translates to physical ids BEFORE freeing,
+    so the parked KV can be gathered off the (shared) device arrays."""
+    shared = SharedPagePool(8)
+    a = shared.view("a", policy="fixed", fixed_init_pages=1)
+    r = Request("r", PAGE_SIZE * 2 - 4, 4)
+    assert a.try_admit(r)
+    phys_before = a.to_physical(r.pages)
+    g, l = a.reclaim(r)
+    assert g == phys_before and l == []
+    assert r.pages == [] and r.state == "parked"
+    assert sorted(shared.free) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# integration: real paged runners aliasing one device array set
+# ---------------------------------------------------------------------------
+
+def _submit(h, reqs):
+    out = []
+    for rid, prompt, gen in reqs:
+        r = Request(rid, prompt, gen)
+        h.submit_request(r)
+        out.append(r)
+    return out
+
+
+def _drive(handles, max_steps=8000):
+    alive = set(range(len(handles)))
+    steps = 0
+    while alive and steps < max_steps:
+        for t in list(alive):
+            if not handles[t].step()["alive"]:
+                alive.discard(t)
+        steps += 1
+    assert not alive, "tenants did not drain"
+
+
+def test_mixed_pod_aliasing_acceptance():
+    """The tenancy acceptance scenario with physical aliasing: two
+    same-model tenants alias ONE device array set, a same-model tenant
+    with ``alias_kv=False`` keeps private arrays, and a different-model
+    tenant (mismatched KV shape) falls back to its own store -- all
+    token-exact: tenants given identical request ids produce identical
+    tokens regardless of whose arrays they write."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=64)
+    mk = lambda name, arch, **o: cluster.submit(Application.serve(
+        arch, reduced=True, name=name, max_batch=4, backend="paged",
+        policy="fixed", **o))
+    a = mk("alias-a", "tinyllama-1.1b")
+    b = mk("alias-b", "tinyllama-1.1b")
+    c = mk("private-c", "tinyllama-1.1b", alias_kv=False)
+    d = mk("other-d", "gemma3-12b")
+
+    shared = cluster.pod_pool("pod0")
+    assert a.runner.store is b.runner.store, "same shape must alias"
+    assert c.runner.store is not a.runner.store, "alias_kv=False is private"
+    assert d.runner.store is not a.runner.store, "shape mismatch no alias"
+    assert a.runner.shared_kv and b.runner.shared_kv
+    assert not c.runner.shared_kv
+    # pod registry: the aliased tinyllama store + gemma3's own; C's
+    # private store is runner-held, not pod-registered
+    assert len(shared.kv_stores) == 2
+
+    same = [("r0", 200, 6), ("r1", 64, 6)]
+    ra, rb, rc = _submit(a, same), _submit(b, same), _submit(c, same)
+    rd = _submit(d, [("d0", 200, 8), ("d1", 96, 8)])
+    _drive([a, b, c, d])
+
+    toks = lambda rs: [tuple(r.output_tokens) for r in rs]
+    assert toks(ra) == toks(rb) == toks(rc), \
+        "aliased tenants must be token-exact vs private arrays"
+    assert all(r.output_tokens is not None for r in rd)
+
+    sa = a.serving_stats()
+    assert sa["kv_aliased"] is True
+    assert sa["kv_device_bytes"] == b.serving_stats()["kv_device_bytes"]
+    assert sa["completed"] == 2
+    # pod-level live bytes count the aliased store ONCE
+    assert (sa["shared_pool"]["kv_device_bytes"]
+            == a.runner.store.device_bytes() + d.runner.store.device_bytes())
+    for h in (a, b, c, d):
+        h.release()
+    assert not shared.kv_stores, "last tenant takes the store's HBM with it"
+
+
+def test_park_unpark_aliased_keeps_cotenant_arrays():
+    """Parking one aliased tenant must snapshot only ITS pages: the
+    shared device arrays stay (the co-tenant is decoding through them),
+    the parked tenant's physical pages return to the shared free list,
+    and unpark restores token-identical decoding."""
+    def run(park_mid):
+        cluster = Cluster(pods=1, history=HistoryStore(),
+                          executor=JaxExecutor(seed=0), pool_pages=16)
+        t0 = cluster.submit(Application.serve(
+            "tinyllama-1.1b", reduced=True, name="t0", max_batch=2,
+            backend="paged", policy="fixed"))
+        t1 = cluster.submit(Application.serve(
+            "tinyllama-1.1b", reduced=True, name="t1", max_batch=2,
+            backend="paged", policy="fixed"))
+        r0 = _submit(t0, [("a", 200, 24), ("b", 64, 24)])
+        r1 = _submit(t1, [("c", 200, 24), ("d", 64, 24)])
+        for _ in range(3):
+            t0.step()
+            t1.step()
+        if park_mid:
+            shared = cluster.pod_pool("pod0")
+            used_before = shared.used_pages
+            receipt = t0.park()
+            assert receipt["kv_arrays_dropped"] is False, \
+                "co-tenant still aliases the arrays"
+            assert t0.runner.store.k_pages is not None
+            assert shared.used_pages < used_before, \
+                "parked tenant's physical pages must be freed"
+            for _ in range(6):       # co-tenant decodes (and may reuse
+                t1.step()            # the freed physical pages) meanwhile
+            t0.unpark()
+        _drive([t0, t1])
+        for h in (t0, t1):
+            assert h.serving_stats()["completed"] == 2
+        out = [tuple(r.output_tokens) for r in r0 + r1]
+        t0.release()
+        t1.release()
+        return out
+
+    assert run(park_mid=True) == run(park_mid=False), \
+        "park/unpark must be token-identical under aliasing"
+
+
+def test_all_parked_aliased_tenants_drop_arrays():
+    """A parked co-tenant must not keep the shared arrays alive: when the
+    LAST active tenant parks (or releases while the rest are parked) the
+    pod pays zero KV HBM, and any unpark revives the arrays."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=16)
+    a = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="a", max_batch=2,
+        backend="paged", policy="fixed"))
+    b = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="b", max_batch=2,
+        backend="paged", policy="fixed"))
+    ra = _submit(a, [("a0", 64, 12)])
+    rb = _submit(b, [("b0", 64, 12)])
+    for _ in range(2):
+        a.step()
+        b.step()
+    store = a.runner.store
+    assert a.park()["kv_arrays_dropped"] is False   # b still active
+    assert b.park()["kv_arrays_dropped"] is True    # last active tenant
+    assert store.device_bytes() == 0
+    a.unpark()                                      # revives the arrays
+    assert store.k_pages is not None
+    b.unpark()
+    _drive([a, b])
+    assert len(ra[0].output_tokens) == len(rb[0].output_tokens) == 13
+    # release while the co-tenant is parked: arrays drop again
+    b.park()
+    a.release()
+    assert store.device_bytes() == 0, \
+        "a parked sole survivor must not pin the store's HBM"
+    b.unpark()
+    b.release()
+    assert not cluster.pod_pool("pod0").kv_stores
+
+
+def test_sole_aliased_tenant_park_drops_arrays():
+    """With no co-tenant left, parking the last aliasing tenant DOES
+    drop the device arrays (the PR 3 reclamation) and unpark revives
+    them."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=16)
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="solo", max_batch=2,
+        backend="paged", policy="fixed"))
+    reqs = _submit(h, [("a", 200, 16)])
+    for _ in range(3):
+        h.step()
+    store = h.runner.store
+    receipt = h.park()
+    assert receipt["kv_arrays_dropped"] is True
+    assert store.device_bytes() == 0 and store.k_pages is None
+    h.unpark()
+    assert store.k_pages is not None
+    _drive([h])
+    assert h.serving_stats()["completed"] == 1
+    assert len(reqs[0].output_tokens) == 17
+    h.release()
