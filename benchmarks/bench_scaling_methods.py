@@ -24,7 +24,7 @@ except ImportError:  # run as a script: benchmarks/ is sys.path[0]
     from common import row, timeit
 from repro.configs import SHAPES, get_config
 from repro.core import profiles as prof
-from repro.core.materializer import GB, SINGLE_POD, materialize
+from repro.core.materializer import SINGLE_POD, materialize
 
 HOST_BW = 50e9
 DCN_BW = 25e9

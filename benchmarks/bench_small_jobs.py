@@ -12,15 +12,13 @@ Derived: measured step wall time + working-set estimate.
 """
 
 import jax
-import jax.numpy as jnp
 
 try:
     from benchmarks.common import block, row, timeit
 except ImportError:  # run as a script: benchmarks/ is sys.path[0]
     from common import block, row, timeit
 from repro.configs import get_config
-from repro.core.materializer import (GB, SINGLE_POD, Plan,
-                                     estimate_bytes_per_device)
+from repro.core.materializer import SINGLE_POD, Plan, estimate_bytes_per_device
 from repro.configs.base import ShapeConfig
 from repro.models import ImplConfig, build_model
 from repro.training import optimizer as opt

@@ -1,0 +1,23 @@
+"""zenlint: AST invariant analysis for the Zenix serving data plane.
+
+The repo's hardest invariants are conventions the type system cannot
+see -- view-local vs physical page ids, donated jit buffers, O(1)-compile
+bucketing, sync-free hot paths, reclaim/regrant pairing.  This package
+machine-checks them at lint time:
+
+    PYTHONPATH=src python -m repro.analysis src benchmarks examples
+
+Programmatic surface: :func:`analyze_paths` / :func:`analyze_source`
+return :class:`Finding` lists; ``rules.ALL_RULES`` is the registry.
+Suppress a single finding with an inline justification::
+
+    risky_line()   # zenlint: ignore[ZL004] -- why this one is fine
+
+Runs on the standard library only (no jax import), so it works in any
+CI job.
+"""
+
+from repro.analysis.engine import (Finding, Module, Rule, analyze_paths,
+                                   analyze_source)
+
+__all__ = ["Finding", "Module", "Rule", "analyze_paths", "analyze_source"]

@@ -1,0 +1,77 @@
+"""CLI: ``python -m repro.analysis <paths...>``.
+
+Exit status 1 on any unsuppressed finding (the CI zenlint gate), 0 on a
+clean tree.  Suppressed findings are listed (with their justification)
+when ``--show-suppressed`` is given and always counted in the per-rule
+summary, so the job log records how many invariant exceptions the tree
+carries and why.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.analysis.engine import (ENGINE_RULE, Finding, analyze_paths,
+                                   default_rules)
+
+
+def summarize(findings: List[Finding]) -> str:
+    rules = {r.rule_id: r.title for r in default_rules()}
+    rules[ENGINE_RULE] = "analyzer diagnostics (unsuppressable)"
+    lines = [f"{'rule':<7} {'open':>5} {'suppressed':>11}  invariant"]
+    for rid in sorted(rules):
+        open_n = sum(1 for f in findings
+                     if f.rule == rid and not f.suppressed)
+        sup_n = sum(1 for f in findings if f.rule == rid and f.suppressed)
+        lines.append(f"{rid:<7} {open_n:>5} {sup_n:>11}  {rules[rid]}")
+    return "\n".join(lines)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="zenlint: AST invariant analysis (page-id provenance, "
+                    "jit donation/recompile hazards, host-sync-free hot "
+                    "paths, pool-accounting pairing)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="ZL00x",
+                    help="run only these rule ids (repeatable)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed findings with reasons")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    rules = default_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.rule_id}  {r.title}")
+        return 0
+    if args.rule:
+        wanted = {r.upper() for r in args.rule}
+        rules = [r for r in rules if r.rule_id in wanted]
+        unknown = wanted - {r.rule_id for r in rules}
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    findings = analyze_paths(args.paths, rules)
+    open_findings = [f for f in findings if not f.suppressed]
+    for f in findings:
+        if not f.suppressed or args.show_suppressed:
+            print(f.render())
+    print()
+    print(summarize(findings))
+    print(f"\nzenlint: {'FAIL' if open_findings else 'OK'} "
+          f"({len(open_findings)} open finding(s), "
+          f"{len(findings) - len(open_findings)} suppressed)")
+    return 1 if open_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""The zenlint rule set.  Each module encodes one invariant of the
+paged serving data plane; ``ALL_RULES`` is the registry the engine and
+the CLI instantiate.  See ``docs/analysis.md`` for the catalogue
+(invariant, example violation, correct pattern, suppression) per rule.
+"""
+
+from repro.analysis.rules.accounting import AccountingPairing
+from repro.analysis.rules.donation import DonationAfterUse
+from repro.analysis.rules.hostsync import HostSyncInHotPath
+from repro.analysis.rules.provenance import PageIdProvenance
+from repro.analysis.rules.recompile import RecompileHazard
+
+ALL_RULES = [PageIdProvenance, DonationAfterUse, RecompileHazard,
+             HostSyncInHotPath, AccountingPairing]
+
+__all__ = ["ALL_RULES", "PageIdProvenance", "DonationAfterUse",
+           "RecompileHazard", "HostSyncInHotPath", "AccountingPairing"]

@@ -1,0 +1,103 @@
+"""ZL005: pool-accounting pairing -- reclaim receipts must be consumed.
+
+``reclaim``/``drain``/``park``/``regrant`` are the four verbs that move
+pages and bytes between an application and the pod, and every one of
+them RETURNS the evidence of what moved: reclaim/drain hand back the
+physical ids whose contents must be snapshotted before co-tenants reuse
+them, ``scheduler.park`` returns the freed bytes unpark must reacquire,
+and ``regrant`` returns whether the pages came back at all.  Dropping
+any of these on the floor is how pages get stranded and parked apps
+become unresumable -- silently, because the accounting still "adds up"
+until the next unpark.
+
+This rule flags, per function:
+
+* a receipt-bearing call used as a bare expression statement (the
+  result is discarded outright);
+* a receipt bound to a name that is never read afterwards;
+* an early ``return`` between binding a receipt and its first use --
+  the exit path walks off with pages reclaimed but their receipt
+  unconsumed (the "all exits" half of the invariant, approximated
+  lexically).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.analysis.engine import Module, Rule, dotted, stmt_exprs
+
+RECEIPT_CALLS = {"reclaim", "drain", "park", "regrant"}
+
+
+def _leaf(path: Optional[str]) -> Optional[str]:
+    return None if path is None else path.rsplit(".", 1)[-1]
+
+
+def _receipt_call(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Call):
+        leaf = _leaf(dotted(node.func))
+        if leaf in RECEIPT_CALLS:
+            return leaf
+    return None
+
+
+def _reads_name(node: ast.AST, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               and isinstance(n.ctx, ast.Load)
+               for n in ast.walk(node))
+
+
+class AccountingPairing(Rule):
+    rule_id = "ZL005"
+    title = "reclaim/park receipts must be consumed on every path"
+
+    def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        for func in mod.functions():
+            # name -> (verb, bind line), pending first use
+            pending: Dict[str, Tuple[str, int]] = {}
+            for stmt in func.statements():
+                # discarded outright: `pool.reclaim(req)` as a statement
+                if isinstance(stmt, ast.Expr):
+                    verb = _receipt_call(stmt.value)
+                    if verb is not None:
+                        yield (stmt.lineno,
+                               f"result of {verb}() discarded: the receipt "
+                               "(page ids / freed bytes / success flag) is "
+                               "the only record of what moved -- consume "
+                               "or propagate it")
+                # early exit with receipts still unconsumed
+                if isinstance(stmt, ast.Return):
+                    returns = stmt.value
+                    for name, (verb, line) in list(pending.items()):
+                        if returns is not None and _reads_name(returns,
+                                                               name):
+                            pending.pop(name)
+                        else:
+                            yield (stmt.lineno,
+                                   f"return before '{name}' (the {verb}() "
+                                   f"receipt bound at line {line}) is "
+                                   "consumed: this exit strands the "
+                                   "reclaimed pages/bytes")
+                    continue
+                # any read of a pending name counts as consumption
+                for expr in stmt_exprs(stmt):
+                    for used in [n for n in pending
+                                 if _reads_name(expr, n)]:
+                        pending.pop(used)
+                # new receipt bindings (checked last: the binding
+                # statement's own value is the call, not a consumption)
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    tgt = stmt.targets[0]
+                    verb = None
+                    for n in ast.walk(stmt.value):
+                        verb = verb or _receipt_call(n)
+                    if verb is not None and isinstance(tgt, ast.Name):
+                        pending[tgt.id] = (verb, stmt.lineno)
+            for name, (verb, line) in pending.items():
+                yield (line,
+                       f"'{name}' holds a {verb}() receipt that is never "
+                       "consumed in this function -- the reclaimed "
+                       "pages/bytes have no paired regrant/release/"
+                       "snapshot handling")

@@ -1,0 +1,107 @@
+"""ZL002: donation-after-use -- reading a buffer after jit donated it.
+
+The paged hot path only avoids copying the whole KV pool per token
+because the page arrays are **donated** to the jitted step functions
+(``donate_argnums``): XLA reuses the input buffer for the output, and
+the Python-side array object passed in becomes INVALID the moment the
+call runs.  The safe idiom is rebinding from the call's own result::
+
+    nxt, self.store.k_pages, self.store.v_pages = self._decode(
+        ..., self.store.k_pages, self.store.v_pages)
+
+Reading the donated path afterwards *without* that rebinding returns
+garbage (or raises, backend-dependent) -- and only under jit, so a test
+running un-jitted never sees it.  This rule finds every module-level
+``X = jax.jit(fn, donate_argnums=...)`` binding, then flags any read of
+a donated argument's dotted path after a call to ``X`` in the same
+function, unless the path was rebound first (by the call's own
+assignment targets or a later store).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.engine import (Module, Rule, dotted, loads_path,
+                                   stmt_exprs)
+from repro.analysis.rules.common import assigned_names
+
+
+def _donated_paths(call: ast.Call, donate: Tuple[int, ...],
+                   donate_names: Tuple[str, ...]) -> List[str]:
+    """Dotted paths of the donated arguments at this call site (non-path
+    expressions -- subscripts, temporaries -- can't be re-read and are
+    skipped)."""
+    out = []
+    for idx in donate:
+        if idx < len(call.args):
+            d = dotted(call.args[idx])
+            if d is not None:
+                out.append(d)
+    for kw in call.keywords:
+        if kw.arg in donate_names:
+            d = dotted(kw.value)
+            if d is not None:
+                out.append(d)
+    return out
+
+
+class DonationAfterUse(Rule):
+    rule_id = "ZL002"
+    title = "donated jit buffers read without rebinding"
+
+    def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        donors = {name: info for name, info in mod.jit_bindings().items()
+                  if info.donate or info.donate_names}
+        if not donors:
+            return
+        for func in mod.functions():
+            # dead[path] = (donating callee, call line); cleared on rebind
+            dead: Dict[str, Tuple[str, int]] = {}
+            for stmt in func.statements():
+                stores = set()
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        stores |= assigned_names(t)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                    d = dotted(stmt.target)
+                    if d is not None:
+                        stores.add(d)
+                # reads of a still-dead donated path (the statement's own
+                # expressions only; nested statements get their own turn).
+                # The donating call's own statement is exempt: its reads
+                # ARE the call arguments.
+                for path, (callee, line) in list(dead.items()):
+                    for expr in stmt_exprs(stmt):
+                        if loads_path(expr, path):
+                            yield (stmt.lineno,
+                                   f"'{path}' was donated to {callee}() at "
+                                   f"line {line} and is read here before "
+                                   "being rebound -- donated buffers are "
+                                   "invalidated by XLA; rebind from the "
+                                   "call's result")
+                            break
+                # rebinding revives the path
+                for path in stores:
+                    dead.pop(path, None)
+                # new donations from calls in this statement
+                newly: Dict[str, Tuple[str, int]] = {}
+                for expr in stmt_exprs(stmt):
+                    for call in (n for n in ast.walk(expr)
+                                 if isinstance(n, ast.Call)):
+                        callee = _callee_name(call)
+                        info = donors.get(callee) if callee else None
+                        if info is None:
+                            continue
+                        for path in _donated_paths(call, info.donate,
+                                                   info.donate_names):
+                            newly[path] = (callee, stmt.lineno)
+                for path, origin in newly.items():
+                    if path not in stores:   # call's own targets rebind
+                        dead[path] = origin
+
+
+def _callee_name(call: ast.Call) -> Optional[str]:
+    d = dotted(call.func)
+    return None if d is None else d.rsplit(".", 1)[-1]

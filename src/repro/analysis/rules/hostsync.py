@@ -1,0 +1,121 @@
+"""ZL004: host synchronization inside serving hot paths.
+
+A paged decode step is asynchronous end to end: the engine enqueues
+device work and the only host<->device round trip is the one batched
+token fetch per step.  Any *extra* sync in the per-token path --
+``.item()``, ``int()``/``float()`` on a device array, ``np.asarray`` on
+a jit result, ``jax.device_get``, an implicit bool coercion -- stalls
+the device pipeline once per token per request and quietly multiplies
+TTFT.  Worse, inside the jit-traced ``_fn`` bodies the same calls are
+correctness bugs (a tracer has no concrete value to sync).
+
+This rule tracks which names in a hot-path function hold device values
+(results of module-registered jitted callables or of ``jnp.*`` calls)
+and flags every host-forcing operation on them, plus the operations
+that always sync regardless of operand (``.item()``,
+``jax.device_get``).  The deliberate one-sync-per-step sites carry a
+``# zenlint: ignore[ZL004]`` with their justification -- the rule's job
+is making every OTHER sync a conscious, reviewed decision.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set, Tuple
+
+from repro.analysis.engine import Module, Rule, dotted, stmt_exprs
+from repro.analysis.rules.common import assigned_names, is_hot_path
+
+COERCIONS = {"int", "float", "bool", "complex"}
+
+
+def _leaf(path: Optional[str]) -> Optional[str]:
+    return None if path is None else path.rsplit(".", 1)[-1]
+
+
+def _is_device_call(call: ast.Call, jitted) -> bool:
+    d = dotted(call.func)
+    if d is None:
+        return False
+    if d.split(".", 1)[0] == "jnp":
+        return True
+    return d.rsplit(".", 1)[-1] in jitted
+
+
+def _mentions_device(node: ast.AST, device: Set[str], jitted) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)):
+            d = dotted(n)
+            if d is not None and d in device:
+                return True
+        elif isinstance(n, ast.Call) and _is_device_call(n, jitted):
+            return True
+    return False
+
+
+class HostSyncInHotPath(Rule):
+    rule_id = "ZL004"
+    title = "host synchronization in serving hot paths"
+
+    def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        jitted = mod.jit_bindings()
+        for func in mod.functions():
+            if not is_hot_path(func):
+                continue
+            device: Set[str] = set()
+            for stmt in func.statements():
+                for expr in stmt_exprs(stmt):
+                    yield from self._check_expr(expr, device, jitted)
+                if isinstance(stmt, ast.If):
+                    if _mentions_device(stmt.test, device, jitted):
+                        yield (stmt.lineno,
+                               "implicit bool() of a device value in an "
+                               "if-test: this blocks on the device -- "
+                               "restructure, or sync once explicitly")
+                # update the device-name set AFTER checking: assignment
+                # from a jit/jnp call marks the targets device-resident,
+                # anything else (np.asarray(...), literals) clears them
+                if isinstance(stmt, ast.Assign):
+                    is_dev = _mentions_device(stmt.value, device, jitted)
+                    if (isinstance(stmt.value, ast.Call)
+                            and dotted(stmt.value.func)
+                            in ("np.asarray", "np.array", "numpy.asarray",
+                                "numpy.array", "jax.device_get")):
+                        # the flagged sync itself lands the value on host:
+                        # downstream reads of the target are sync-free
+                        is_dev = False
+                    for t in stmt.targets:
+                        for path in assigned_names(t):
+                            if is_dev:
+                                device.add(path)
+                            else:
+                                device.discard(path)
+
+    def _check_expr(self, expr: ast.AST, device: Set[str],
+                    jitted) -> Iterator[Tuple[int, str]]:
+        for call in (n for n in ast.walk(expr)
+                     if isinstance(n, ast.Call)):
+            cd = dotted(call.func)
+            leaf = _leaf(cd)
+            if leaf == "item" and isinstance(call.func, ast.Attribute):
+                yield (call.lineno,
+                       ".item() in a hot path: one blocking device->host "
+                       "transfer per call -- batch the fetch per step")
+            elif cd == "jax.device_get":
+                yield (call.lineno,
+                       "jax.device_get in a hot path: blocking transfer "
+                       "-- batch the fetch per step")
+            elif (cd in ("np.asarray", "np.array", "numpy.asarray",
+                         "numpy.array") and call.args
+                  and _mentions_device(call.args[0], device, jitted)):
+                yield (call.lineno,
+                       f"{cd} on a device value in a hot path: blocking "
+                       "device->host transfer -- keep the value on device "
+                       "or batch the fetch")
+            elif (isinstance(call.func, ast.Name)
+                  and call.func.id in COERCIONS and call.args
+                  and _mentions_device(call.args[0], device, jitted)):
+                yield (call.lineno,
+                       f"{call.func.id}() on a device value in a hot "
+                       "path: implicit blocking sync -- fetch the batch "
+                       "once (np.asarray after the step) and index that")

@@ -1,0 +1,189 @@
+"""ZL001: page-id provenance -- view-local ids vs physical ids.
+
+The isolation boundary of multi-tenant serving is a *unit system*:
+requests hold **view-local** page ids (``req.pages``/``req.local_pages``,
+everything a ``PoolView``/``PagePool`` grant returns), while the device
+page arrays, the shared free lists, and the decode kernel's page tables
+speak **physical** ids.  ``to_physical``/``to_physical_local`` (and the
+runner's ``_phys``/``_phys_local`` wrappers) are the only conversion --
+and it raises on ids the view no longer owns, which is the whole guard.
+
+Mixing the units never fails loudly on a private pool (the remap is the
+identity there), so the bug ships and only detonates under tenancy.
+This rule flow-tracks both taints per function and flags:
+
+* a view-local value reaching a physical sink: ``page_table(pages=...)``,
+  ``SharedPagePool._give``, or a shared free list's ``extend``;
+* a physical value stored back onto a request (``req.pages = phys`` /
+  ``req.pages.extend(phys)``) -- requests must only ever hold view ids;
+* a physical value translated *again* through ``to_physical*`` -- double
+  translation reads some other tenant's pages when ids happen to alias.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.analysis.engine import Module, Rule, dotted, stmt_calls
+
+VIEW = "view-local"
+PHYS = "physical"
+
+#: grant APIs: whatever they return is what requests hold (view ids)
+VIEW_CALLS = {"_alloc", "_alloc_local", "_new_ids"}
+#: translation / physical-side APIs: results are physical ids
+PHYS_CALLS = {"to_physical", "to_physical_local", "_phys", "_phys_local",
+              "reclaim", "_take"}
+#: remap tables: indexing or popping one yields a physical id
+REMAP_NAMES = {"_remap", "_remap_local"}
+#: request attributes that hold view-local ids
+REQ_ID_ATTRS = ("pages", "local_pages")
+#: physical-side free lists: extending one with view ids corrupts the pool
+PHYS_FREE_NAMES = {"free_local"}
+
+#: pass-through wrappers: taint flows through the first argument
+TRANSPARENT_CALLS = {"list", "sorted", "reversed", "tuple", "asarray",
+                     "array"}
+
+
+def _leaf(path: Optional[str]) -> Optional[str]:
+    return None if path is None else path.rsplit(".", 1)[-1]
+
+
+class PageIdProvenance(Rule):
+    rule_id = "ZL001"
+    title = "view-local vs physical page-id provenance"
+
+    # -- expression taint ---------------------------------------------------
+    def _taint(self, node: ast.AST, env: Dict[str, str]) -> Optional[str]:
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            d = dotted(node)
+            if d is None:
+                return None
+            if d in env:
+                return env[d]
+            if _leaf(d) in REQ_ID_ATTRS and "." in d:
+                return VIEW
+            return None
+        if isinstance(node, ast.Call):
+            leaf = _leaf(dotted(node.func))
+            if leaf in PHYS_CALLS:
+                return PHYS
+            if leaf in VIEW_CALLS:
+                return VIEW
+            if leaf == "pop":
+                base = _leaf(dotted(getattr(node.func, "value", None)))
+                if base in REMAP_NAMES:
+                    return PHYS
+            if leaf in TRANSPARENT_CALLS and node.args:
+                return self._taint(node.args[0], env)
+            return None
+        if isinstance(node, ast.Subscript):
+            base = _leaf(dotted(node.value))
+            if base in REMAP_NAMES:
+                return PHYS
+            return self._taint(node.value, env)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            inner = dict(env)
+            for gen in node.generators:
+                if isinstance(gen.target, ast.Name):
+                    t = self._taint(gen.iter, env)
+                    if t is not None:
+                        inner[gen.target.id] = t
+            return self._taint(node.elt, inner)
+        if isinstance(node, ast.BinOp):
+            return (self._taint(node.left, env)
+                    or self._taint(node.right, env))
+        if isinstance(node, ast.IfExp):
+            a = self._taint(node.body, env)
+            b = self._taint(node.orelse, env)
+            return a if a == b else (a or b)
+        if isinstance(node, ast.Starred):
+            return self._taint(node.value, env)
+        return None
+
+    # -- sinks --------------------------------------------------------------
+    def _check_call(self, call: ast.Call,
+                    env: Dict[str, str]) -> Iterator[Tuple[int, str]]:
+        leaf = _leaf(dotted(call.func))
+        if leaf == "page_table":
+            for kw in call.keywords:
+                if kw.arg == "pages" and self._taint(kw.value, env) == VIEW:
+                    yield (kw.value.lineno,
+                           "view-local page ids reach page_table(pages=...):"
+                           " the kernel indexes the device arrays by "
+                           "PHYSICAL ids -- translate via "
+                           "pool.to_physical() first")
+        elif leaf == "_give":
+            for arg in call.args:
+                if self._taint(arg, env) == VIEW:
+                    yield (arg.lineno,
+                           "view-local ids returned to the shared pool's "
+                           "physical free list (_give): translate via the "
+                           "remap before freeing")
+        elif leaf in ("to_physical", "to_physical_local",
+                      "_phys", "_phys_local"):
+            for arg in call.args:
+                if self._taint(arg, env) == PHYS:
+                    yield (arg.lineno,
+                           f"already-physical ids translated again through "
+                           f"{leaf}(): double translation resolves through "
+                           "the wrong view's remap")
+        elif leaf == "extend":
+            base = dotted(getattr(call.func, "value", None))
+            if (_leaf(base) in PHYS_FREE_NAMES and call.args
+                    and self._taint(call.args[0], env) == VIEW):
+                yield (call.lineno,
+                       "view-local ids pushed onto a physical free list "
+                       f"({base}.extend): free the PHYSICAL ids instead")
+            if (base is not None and _leaf(base) in REQ_ID_ATTRS
+                    and "." in base and call.args
+                    and self._taint(call.args[0], env) == PHYS):
+                yield (call.lineno,
+                       f"physical ids appended to {base}: requests must "
+                       "hold view-local ids only (grants already return "
+                       "them)")
+
+    # -- driver -------------------------------------------------------------
+    def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        for func in mod.functions():
+            env: Dict[str, str] = {}
+            for stmt in func.statements():
+                # sinks first: the env of a statement is everything bound
+                # strictly before it
+                for call in stmt_calls(stmt):
+                    yield from self._check_call(call, env)
+                if isinstance(stmt, ast.Assign):
+                    targets = stmt.targets
+                    if (len(targets) == 1
+                            and isinstance(targets[0], (ast.Tuple, ast.List))
+                            and isinstance(stmt.value,
+                                           (ast.Tuple, ast.List))
+                            and len(targets[0].elts)
+                            == len(stmt.value.elts)):
+                        pairs = zip(targets[0].elts, stmt.value.elts)
+                    elif len(targets) == 1:
+                        pairs = [(targets[0], stmt.value)]
+                    else:
+                        pairs = [(t, stmt.value) for t in targets]
+                    for tgt, val in pairs:
+                        d = dotted(tgt)
+                        if d is None:
+                            continue
+                        t = self._taint(val, env)
+                        if (_leaf(d) in REQ_ID_ATTRS and "." in d
+                                and t == PHYS):
+                            yield (stmt.lineno,
+                                   f"physical ids stored on {d}: requests "
+                                   "must hold view-local ids (the remap is "
+                                   "the isolation boundary)")
+                        if t is None:
+                            env.pop(d, None)
+                        else:
+                            env[d] = t
+                elif isinstance(stmt, ast.For):
+                    if isinstance(stmt.target, ast.Name):
+                        t = self._taint(stmt.iter, env)
+                        if t is not None:
+                            env[stmt.target.id] = t

@@ -1,0 +1,104 @@
+"""ZL003: recompile hazards -- per-request values becoming compile keys.
+
+Bursty serving stays O(1)-compile (PR 4's property) only because every
+value that reaches a jit compile key is *bucketed* first: batch padded
+to ``max_batch``, page-table width to the next power of two, prompts to
+whole pages.  One careless edit -- a raw ``req.prompt_len`` as a static
+arg, a staging array shaped by ``len(running)`` -- and the engine
+recompiles per request under load, which is exactly the pathology the
+``decode_traces``/``prefill_traces`` counters were added to catch *at
+runtime*.  This rule catches it at lint time instead.  In hot-path
+functions (see :mod:`repro.analysis.rules.common`) it flags:
+
+* ``jax.jit(...)`` constructed inside the hot path itself -- a fresh jit
+  wrapper never hits the trace cache, so this retraces every call;
+* a per-request, non-bucketed expression passed at a ``static_argnums``
+  / ``static_argnames`` position of a module-registered jitted callable;
+* a per-request, non-bucketed expression inside the shape argument of a
+  host-side staging-array constructor (``np.zeros``/``ones``/``full``/
+  ``empty``) -- those arrays' shapes feed straight into the jit compile
+  key of the call they are staged for.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Tuple
+
+from repro.analysis.engine import (Module, Rule, dotted, parse_jit_call,
+                                   stmt_calls)
+from repro.analysis.rules.common import (classify_env, is_bucketed,
+                                         is_hot_path, is_request_derived)
+
+STAGING_CONSTRUCTORS = {"zeros", "ones", "full", "empty"}
+
+
+def _leaf(path: Optional[str]) -> Optional[str]:
+    return None if path is None else path.rsplit(".", 1)[-1]
+
+
+class RecompileHazard(Rule):
+    rule_id = "ZL003"
+    title = "per-request values reaching jit compile keys in hot paths"
+
+    def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        jitted = mod.jit_bindings()
+        for func in mod.functions():
+            if not is_hot_path(func):
+                continue
+            env = classify_env(func)
+            for stmt in func.statements():
+                for call in stmt_calls(stmt):
+                    yield from self._check_call(call, env, jitted)
+
+    def _check_call(self, call: ast.Call, env, jitted):
+        leaf = _leaf(dotted(call.func))
+        if parse_jit_call(call) is not None:
+            yield (call.lineno,
+                   "jax.jit constructed inside a hot path: a fresh jit "
+                   "wrapper retraces on every call -- build it once in "
+                   "__init__ and call the bound version here")
+            return
+        if leaf in STAGING_CONSTRUCTORS and call.args:
+            shape = call.args[0]
+            if (is_request_derived(shape, env)
+                    and not is_bucketed(shape, env)):
+                yield (shape.lineno,
+                       f"per-request value in the shape of a staging "
+                       f"{leaf}(): this shape becomes a jit compile key "
+                       "-- bucket it (max_batch padding, _next_pow2, "
+                       "page math) first")
+            return
+        info = jitted.get(leaf) if leaf else None
+        if info is None:
+            return
+        # a per-request-SHAPED array as a traced argument recompiles just
+        # as surely as a static one: the shape is part of the compile
+        # key.  Bare names only -- inline wrappers like
+        # ``jnp.asarray(req.prompt_len - 1)`` are scalars, and scalar
+        # builtins (max/len/...) are exempted by classify_env.
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            for n in ast.walk(arg):
+                if (isinstance(n, ast.Name)
+                        and env.get(n.id) == "request"):
+                    yield (call.lineno,
+                           f"'{n.id}' is a per-request-shaped value "
+                           f"passed to jitted {leaf}(): its shape is a "
+                           "compile key -- bucket it (pad to a page/"
+                           "power-of-two boundary) first")
+        if not (info.static or info.static_names):
+            return
+        hazards = []
+        for idx in info.static:
+            if idx < len(call.args):
+                hazards.append(call.args[idx])
+        for kw in call.keywords:
+            if kw.arg in info.static_names:
+                hazards.append(kw.value)
+        for arg in hazards:
+            if is_request_derived(arg, env) and not is_bucketed(arg, env):
+                yield (arg.lineno,
+                       f"per-request value at a static_argnums position "
+                       f"of {leaf}(): every distinct value is a fresh "
+                       "XLA compile -- bucket it or make it a traced "
+                       "argument")

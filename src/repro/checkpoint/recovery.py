@@ -19,10 +19,8 @@ work re-dispatch (you cannot reassign a single chip's shard mid-step)."""
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 from repro.core.history import DecayedHistogram
 from repro.core.materializer import MeshSpec, Plan, materialize

@@ -14,10 +14,9 @@ pinned by the assignment (see DESIGN.md for sources / verified tiers).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 
 # ---------------------------------------------------------------------------
 # Block kinds: the repeating-pattern units a model is built from.  A model's

@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import functools
 import threading
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 _REGISTRY = threading.local()
 

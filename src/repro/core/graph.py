@@ -18,9 +18,8 @@ semantics (§5.3.2) are defined over this graph as well.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 from repro.configs.base import (ATTN_SHARED, MOE, ModelConfig, ShapeConfig)
 from repro.core import profiles as prof

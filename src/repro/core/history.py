@@ -14,9 +14,8 @@ import math
 import os
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 DEFAULT_DECAY = 0.98
 NUM_BUCKETS = 64

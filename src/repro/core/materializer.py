@@ -30,11 +30,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.configs.base import ModelConfig, ShapeConfig, MOE, RWKV6, MAMBA2
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import profiles as prof
-from repro.core.graph import ResourceGraph, build_resource_graph
 from repro.core.history import HistoryStore
 
 GB = 1 << 30

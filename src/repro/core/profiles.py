@@ -11,9 +11,7 @@ profiling), refining these estimates for future invocations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
-import numpy as np
 
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_SHARED,
                                 DEC_ATTN, ENC_ATTN, MAMBA2, MOE, RWKV6,

@@ -12,7 +12,6 @@ seqshard path) rather than inside the kernel."""
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

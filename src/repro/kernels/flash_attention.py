@@ -19,7 +19,6 @@ over q-blocks.  ref.py holds the jnp oracle; ops.py wires custom_vjp.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,8 @@ through jax.custom_vjp so training uses the kernel gradient path.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa

@@ -23,7 +23,6 @@ recovered as the latest ``p' <= pos`` congruent to the slot index
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

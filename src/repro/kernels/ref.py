@@ -5,7 +5,7 @@ tests/test_kernels.py across shape/dtype sweeps."""
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

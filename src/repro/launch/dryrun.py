@@ -24,15 +24,12 @@ import json
 import re
 import time
 import traceback
-from collections import Counter
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
-                                list_archs, shape_applicable)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, list_archs, shape_applicable
 from repro.core.history import HistoryStore
 from repro.core.materializer import (MESHES, GB, Plan, escalate, materialize)
 from repro.launch.input_specs import input_specs
@@ -272,9 +269,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     lowered = compiled = None
     for attempt in range(max_escalations + 1):
         lowered, _ = lower_cell(cfg, shape, plan, mesh)
-        t_lower = time.time() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
         mem = memory_footprint(compiled)
         if mem["peak_tpu_adjusted"] <= budget:
             break

@@ -8,7 +8,7 @@ embeddings (B, 1500, D); phi-3-vision gets CLIP patch features (B, 576,
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ try:  # jax >= 0.5: explicit-sharding axis types
 except ImportError:  # pragma: no cover - older jax has Auto-only meshes
     AxisType = None
 
-from repro.core.materializer import MESHES, MULTI_POD, SINGLE_POD, MeshSpec
+from repro.core.materializer import MESHES, MeshSpec
 
 
 def _make_mesh(shape, axes) -> Mesh:

@@ -323,7 +323,6 @@ def self_attention_decode(p: Params, x: jax.Array, cache: Params,
 
     ``shard_ctx``: optional (mesh, seq_axes, batch_axes) when the cache is
     sequence-sharded (flash-decode materialization)."""
-    b = x.shape[0]
     s_cache = cache["k"].shape[2]
     positions = jnp.full((1,), pos, jnp.int32)
     q, k, v = project_qkv(p, x, cfg, positions, prefix)

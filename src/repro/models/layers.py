@@ -8,7 +8,6 @@ planner share one source of truth with the compute code.
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

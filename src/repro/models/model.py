@@ -8,14 +8,13 @@ or unrolled for cost-extrapolation probes.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN_SHARED, DEC_ATTN, ENC_ATTN, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import transformer as T

@@ -21,7 +21,7 @@ The dispatch here is therefore *local by construction* under shard_map:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -187,7 +187,6 @@ def init_rwkv_state(cfg: ModelConfig, batch: int):
 def time_mix_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
                     cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (B, 1, D).  Single-step recurrence."""
-    b = x.shape[0]
     h, hd = cfg.num_heads, cfg.head_dim
     r, k, v, g, logw = time_mix_projections(p, x, state["shift_t"], cfg)
     r32, k32, v32 = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))

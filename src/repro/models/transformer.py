@@ -14,7 +14,6 @@ component* feeding many *compute components* in resource-graph terms.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

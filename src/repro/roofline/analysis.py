@@ -23,10 +23,9 @@ from __future__ import annotations
 import glob
 import json
 import os
-from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from repro.core.materializer import MESHES, GB
+from repro.core.materializer import GB
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")

@@ -237,6 +237,11 @@ class DenseRunner(ModelRunner):
 
     def prefill(self, req: Request) -> None:
         toks = synth_prompt(req.req_id, req.prompt_len, self.cfg.vocab_size)
+        # zenlint: ignore[ZL003] -- dense prefill compiles per distinct
+        # prompt length BY DESIGN: this backend also serves recurrent
+        # families (SSM/RWKV) whose prefill state after padded tokens
+        # cannot be masked back out, so length bucketing would change
+        # outputs; the paged backend is the O(1)-compile serving path.
         logits, rc = self._prefill(self.params, {"tokens": toks})
         # evict slots of preempted requests (the engine re-queues them;
         # only completion frees a slot via finish) before picking one
@@ -254,6 +259,9 @@ class DenseRunner(ModelRunner):
             lambda full, one: jax.lax.dynamic_update_slice_in_dim(
                 full, one.astype(full.dtype), slot, axis=1),
             self.cache, rc)
+        # zenlint: ignore[ZL004] -- first-token extraction: prefill is
+        # once per request (not per token) and the engine needs the
+        # token id to seed decode; this is the designed sync point.
         self.generated[req.req_id] = [int(jnp.argmax(logits[0, -1]))]
 
     def decode(self, running: List[Request]) -> None:
@@ -268,6 +276,8 @@ class DenseRunner(ModelRunner):
         logits, self.cache = self._decode(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(pos, jnp.int32))
+        # zenlint: ignore[ZL004] -- THE one batched device->host fetch
+        # per decode step: every lane's next token in a single transfer.
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
         for req in running:
             slot, _ = self.slots[req.req_id]
@@ -489,6 +499,8 @@ class PagedRunner(ModelRunner):
             self.params, toks, jnp.asarray(req.prompt_len - 1, jnp.int32),
             jnp.asarray(g_ids), jnp.asarray(l_ids), jnp.asarray(l_src),
             self.store.k_pages, self.store.v_pages)
+        # zenlint: ignore[ZL004] -- first-token extraction: once per
+        # request at prefill, the designed sync point (see DenseRunner).
         self.generated[req.req_id] = [int(nxt)]
 
     # -- decode --------------------------------------------------------------
@@ -580,6 +592,9 @@ class PagedRunner(ModelRunner):
             jnp.asarray(phys_g), jnp.asarray(phys_l), jnp.asarray(offs),
             jnp.asarray(table_g), jnp.asarray(table_l), jnp.asarray(vlen),
             self.store.k_pages, self.store.v_pages)
+        # zenlint: ignore[ZL004] -- THE one batched device->host fetch
+        # per decode step (all lanes' tokens in one transfer); every
+        # other read below indexes this host copy.
         nxt = np.asarray(nxt)
         for i, req in enumerate(running):
             self.generated[req.req_id].append(int(nxt[i]))

@@ -2,9 +2,8 @@
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.materializer import Plan

@@ -8,7 +8,7 @@ to replication -- e.g. GQA KV heads of 8 on a 16-way model axis).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -7,14 +7,12 @@ gradient compression on the cross-pod axis, and the AdamW update.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.core.materializer import Plan
 from repro.models.model import Model
 from repro.models.transformer import ImplConfig

@@ -1,0 +1,186 @@
+"""Edge-case tests for the CI bench-gate (benchmarks/check_regression.py):
+missing files on either side, metrics present on one side only, exact
+tolerance boundaries, smoke-flag mismatches, and --update's refusal of
+full-scale artifacts.
+
+The gate is stdlib-only and lives outside the package, so it is loaded
+straight from its file path.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_regression", REPO / "benchmarks" / "check_regression.py")
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def write_artifact(directory, fname, rows, smoke=True):
+    """rows: {row_name: {metric: value}} -> a BENCH_*.json artifact."""
+    payload = {
+        "rows": [{"name": name,
+                  "derived": ";".join(f"{k}={v}" for k, v in d.items()),
+                  "us_per_call": 7.0}
+                 for name, d in rows.items()],
+        "extra": {} if smoke is None else {"smoke": smoke},
+    }
+    directory.mkdir(parents=True, exist_ok=True)
+    (directory / fname).write_text(json.dumps(payload))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    return tmp_path / "baselines", tmp_path / "current"
+
+
+# ---------------------------------------------------------------------------
+# unit level: rule_for / parse_derived / check_metric
+# ---------------------------------------------------------------------------
+
+def test_rule_for_classification():
+    assert cr.rule_for("completed") == ("exact", 0.0, 0.0)
+    assert cr.rule_for("us_per_call") is None          # wall clock
+    assert cr.rule_for("prefill_us") is None
+    assert cr.rule_for("pool_util")[0] == "higher_worse"
+    assert cr.rule_for("ttft_ticks_p50")[0] == "higher_worse"
+    assert cr.rule_for("decode_compiles") == ("higher_worse", 0.0, 1.0)
+    assert cr.rule_for("kv_bytes_ratio")[0] == "lower_worse"
+    assert cr.rule_for("reuse_frac")[0] == "lower_worse"
+    assert cr.rule_for("some_novel_metric") is None
+
+
+def test_parse_derived_percent_and_garbage():
+    d = cr.parse_derived("util=55%; completed=8 ;note=n/a;;broken")
+    assert d == {"util": 55.0, "completed": 8.0}
+
+
+def test_check_metric_exact():
+    assert cr.check_metric("completed", 8.0, 8.0)[0] == "OK"
+    assert cr.check_metric("completed", 8.0, 7.0)[0] == "FAIL"
+
+
+def test_check_metric_tolerance_boundary():
+    # decode_compiles: rel_tol 0, abs_slack 1 -> allowed delta is
+    # EXACTLY 1.0; the comparison is strict (> allowed fails)
+    assert cr.check_metric("decode_compiles", 3.0, 4.0)[0] == "OK"
+    assert cr.check_metric("decode_compiles", 3.0, 4.5)[0] == "FAIL"
+    # improvement in the worse direction's opposite never fails
+    assert cr.check_metric("decode_compiles", 3.0, 1.0)[0] == "OK"
+    # lower_worse mirrors: kv_bytes_ratio rel .25, slack 0 on base 4
+    assert cr.check_metric("kv_bytes_ratio", 4.0, 3.0)[0] == "OK"
+    assert cr.check_metric("kv_bytes_ratio", 4.0, 2.75)[0] == "FAIL"
+
+
+def test_check_metric_wall_clock_is_info_only():
+    assert cr.check_metric("us_per_call", 1.0, 900.0)[0] == "INFO"
+
+
+# ---------------------------------------------------------------------------
+# compare(): missing files and one-sided metrics
+# ---------------------------------------------------------------------------
+
+def test_compare_empty_baseline_dir(dirs, capsys):
+    baselines, current = dirs
+    baselines.mkdir()
+    assert cr.compare(str(baselines), str(current)) == 1
+    assert "no baselines" in capsys.readouterr().err
+
+
+def test_compare_missing_current_artifact(dirs, capsys):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json", {"row": {"completed": 8}})
+    current.mkdir()
+    assert cr.compare(str(baselines), str(current)) == 1
+    assert "MISSING current artifact" in capsys.readouterr().out
+
+
+def test_compare_gated_metric_disappeared_fails(dirs, capsys):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json",
+                   {"row": {"completed": 8, "pool_util": 0.5}})
+    write_artifact(current, "BENCH_x.json", {"row": {"completed": 8}})
+    assert cr.compare(str(baselines), str(current)) == 1
+    assert "gated metric disappeared" in capsys.readouterr().out
+
+
+def test_compare_info_metric_disappeared_is_ignored(dirs):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json",
+                   {"row": {"completed": 8, "prefill_us": 120.0}})
+    write_artifact(current, "BENCH_x.json", {"row": {"completed": 8}})
+    assert cr.compare(str(baselines), str(current)) == 0
+
+
+def test_compare_metric_only_in_current_is_ignored(dirs):
+    """New metrics appear before their baseline is refreshed; the gate
+    only diffs what the baseline records."""
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json", {"row": {"completed": 8}})
+    write_artifact(current, "BENCH_x.json",
+                   {"row": {"completed": 8, "pool_util": 0.9}})
+    assert cr.compare(str(baselines), str(current)) == 0
+
+
+def test_compare_row_missing_from_current(dirs, capsys):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json",
+                   {"a": {"completed": 8}, "b": {"completed": 4}})
+    write_artifact(current, "BENCH_x.json", {"a": {"completed": 8}})
+    assert cr.compare(str(baselines), str(current)) == 1
+    assert "row missing from current run" in capsys.readouterr().out
+
+
+def test_compare_smoke_flag_mismatch_fails(dirs, capsys):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json", {"row": {"completed": 8}},
+                   smoke=True)
+    write_artifact(current, "BENCH_x.json", {"row": {"completed": 8}},
+                   smoke=False)
+    assert cr.compare(str(baselines), str(current)) == 1
+    assert "smoke flag mismatch" in capsys.readouterr().out
+
+
+def test_compare_clean_pass(dirs):
+    baselines, current = dirs
+    rows = {"row": {"completed": 8, "pool_util": 0.5,
+                    "decode_compiles": 3}}
+    write_artifact(baselines, "BENCH_x.json", rows)
+    write_artifact(current, "BENCH_x.json", rows)
+    assert cr.compare(str(baselines), str(current)) == 0
+
+
+# ---------------------------------------------------------------------------
+# update(): baseline refresh discipline
+# ---------------------------------------------------------------------------
+
+def test_update_refuses_full_scale_artifacts(dirs, capsys):
+    baselines, current = dirs
+    write_artifact(baselines, "BENCH_x.json", {"row": {"completed": 8}})
+    before = (baselines / "BENCH_x.json").read_text()
+    write_artifact(current, "BENCH_x.json", {"row": {"completed": 99}},
+                   smoke=False)
+    assert cr.update(str(baselines), str(current)) == 1
+    assert "REFUSED" in capsys.readouterr().err
+    assert (baselines / "BENCH_x.json").read_text() == before
+
+
+def test_update_copies_smoke_artifacts(dirs):
+    baselines, current = dirs
+    write_artifact(current, "BENCH_x.json", {"row": {"completed": 8}},
+                   smoke=True)
+    assert cr.update(str(baselines), str(current)) == 0
+    assert json.loads((baselines / "BENCH_x.json").read_text()) \
+        == json.loads((current / "BENCH_x.json").read_text())
+
+
+def test_update_with_no_artifacts_fails(dirs, capsys):
+    baselines, current = dirs
+    current.mkdir()
+    assert cr.update(str(baselines), str(current)) == 1
+    assert "no BENCH_" in capsys.readouterr().err

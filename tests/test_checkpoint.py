@@ -2,7 +2,6 @@
 determinism, straggler watchdog, failure injection."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

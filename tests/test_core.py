@@ -3,7 +3,6 @@ graph, history, scheduler, compile cache."""
 
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable

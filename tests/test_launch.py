@@ -2,10 +2,8 @@
 devices: HLO collective parsing, two-point extrapolation, input specs,
 mesh specs, and roofline aggregation."""
 
-import json
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 # NOTE: importing repro.launch.dryrun sets XLA_FLAGS *before* jax is

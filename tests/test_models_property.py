@@ -1,7 +1,6 @@
 """Model-level invariants: attention impl equivalence, masking semantics,
 MoE sharded-vs-local equivalence, ring-buffer windows."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

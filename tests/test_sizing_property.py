@@ -7,8 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sizing import (fixed_sizing, peak_sizing, simulate_policy,
-                               solve_init_step)
+from repro.core.sizing import peak_sizing, simulate_policy, solve_init_step
 from repro.core.history import DecayedHistogram
 
 usage_lists = st.lists(st.floats(min_value=1.0, max_value=1e6,
@@ -84,7 +83,7 @@ def test_histogram_quantile_monotone(vals):
        st.integers(min_value=1, max_value=8))
 def test_page_pool_conservation(lengths, step_pages):
     """Pages are conserved: free + granted == total, always."""
-    from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
+    from repro.serving.kv_cache import PagePool, Request
     pool = PagePool(num_pages=256, policy="fixed", fixed_init_pages=2,
                     fixed_step_pages=step_pages)
     reqs = [Request(f"r{i}", l, 4) for i, l in enumerate(lengths)]

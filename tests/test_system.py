@@ -9,12 +9,10 @@ The headline claims, scaled to CPU-test size:
   4. the engine + pool + sizing close the loop end-to-end.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import reduced_config
 from repro.configs import SHAPES, get_config

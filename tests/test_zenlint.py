@@ -1,0 +1,215 @@
+"""zenlint (repro.analysis) test suite.
+
+Four layers:
+
+* fixture cross-check -- every ``tests/zenlint_fixtures/*.py`` carries
+  ``# EXPECT[ZLxxx]`` markers on the lines that MUST be flagged; the
+  test asserts the analyzer's open findings equal the marker set
+  EXACTLY, so the correct-idiom functions in each fixture double as
+  negative cases (a false positive fails just as hard as a miss);
+* per-rule coverage -- each rule has at least one positive marker and
+  at least one clean function in its fixture file;
+* suppression semantics -- trailing and standalone directives, the
+  mandatory ``-- reason``, wrong-rule ids, docstring mentions;
+* the CLI gate -- exit codes 0/1/2, the rule filter, and the seeded
+  violation file the CI self-check drives.
+"""
+
+import ast
+import io
+import re
+import tokenize
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_source
+from repro.analysis.__main__ import main as zenlint_main
+from repro.analysis.engine import ENGINE_RULE
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "zenlint_fixtures"
+RULE_IDS = ["ZL001", "ZL002", "ZL003", "ZL004", "ZL005"]
+
+_EXPECT = re.compile(r"#\s*EXPECT\[([A-Z0-9,\s]+)\]")
+
+#: a minimal ZL001 violation; ``{}`` takes the trailing comment
+VIOLATION = "def free_view_ids(pool, req):\n    pool._give(req.pages){}\n"
+
+
+def expected_findings(source):
+    """{(line, rule)} from the EXPECT markers (tokenized, not regexed
+    over raw lines, for the same docstring-safety the analyzer has)."""
+    out = set()
+    for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+        if tok.type == tokenize.COMMENT:
+            m = _EXPECT.search(tok.string)
+            if m:
+                for rule in m.group(1).split(","):
+                    out.add((tok.start[0], rule.strip()))
+    return out
+
+
+def fixture_source(rule_id):
+    (path,) = FIXTURES.glob(f"{rule_id.lower()}_*.py")
+    return path.read_text()
+
+
+# ---------------------------------------------------------------------------
+# fixture cross-check
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "name", sorted(p.name for p in FIXTURES.glob("*.py")
+                   if p.name != "__init__.py"))
+def test_fixture_findings_match_markers_exactly(name):
+    source = (FIXTURES / name).read_text()
+    expected = expected_findings(source)
+    findings = analyze_source(source, path=name)
+    actual = {(f.line, f.rule) for f in findings if not f.suppressed}
+    assert actual == expected, (
+        f"missed: {sorted(expected - actual)}; "
+        f"false positives: {sorted(actual - expected)}")
+    assert expected, f"{name} carries no positive cases"
+    assert not [f for f in findings if f.suppressed], (
+        "fixtures must not use suppressions (the suppression tests "
+        "below own that behavior)")
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_each_rule_has_positive_and_negative_fixtures(rule_id):
+    source = fixture_source(rule_id)
+    expected = expected_findings(source)
+    assert any(rule == rule_id for _, rule in expected), (
+        f"no positive fixture for {rule_id}")
+    # negative coverage: at least one function in the file is entirely
+    # clean -- the rule's "correct idiom" demonstration
+    flagged = {line for line, _ in expected}
+    tree = ast.parse(source)
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+             and n.name != "__init__"]
+    clean = [f.name for f in funcs
+             if not any(f.lineno <= line <= f.end_lineno
+                        for line in flagged)]
+    assert clean, f"no negative (clean) fixture function for {rule_id}"
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+# ---------------------------------------------------------------------------
+
+def test_trailing_suppression_with_reason_suppresses():
+    src = VIOLATION.format("  # zenlint: ignore[ZL001] -- test reason")
+    (finding,) = analyze_source(src)
+    assert finding.rule == "ZL001"
+    assert finding.suppressed
+    assert finding.reason == "test reason"
+
+
+def test_standalone_suppression_covers_next_code_line():
+    src = ("def f(pool, req):\n"
+           "    # zenlint: ignore[ZL001] -- justification prose that\n"
+           "    # continues on a second comment line\n"
+           "\n"
+           "    pool._give(req.pages)\n")
+    (finding,) = analyze_source(src)
+    assert finding.suppressed
+    assert "justification prose" in finding.reason
+
+
+def test_reasonless_suppression_is_flagged_and_does_not_suppress():
+    src = VIOLATION.format("  # zenlint: ignore[ZL001]")
+    findings = analyze_source(src)
+    assert sorted(f.rule for f in findings) == [ENGINE_RULE, "ZL001"]
+    assert all(not f.suppressed for f in findings)
+
+
+def test_wrong_rule_id_does_not_suppress():
+    src = VIOLATION.format("  # zenlint: ignore[ZL004] -- wrong rule")
+    open_zl001 = [f for f in analyze_source(src)
+                  if f.rule == "ZL001" and not f.suppressed]
+    assert open_zl001
+
+
+def test_multi_rule_directive_suppresses_each_listed_rule():
+    src = VIOLATION.format(
+        "  # zenlint: ignore[ZL001, ZL004] -- both listed")
+    (finding,) = analyze_source(src)
+    assert finding.suppressed
+
+
+def test_directive_mentioned_in_docstring_is_not_a_directive():
+    src = ('def f(pool, req):\n'
+           '    """prose mentioning # zenlint: ignore[ZL001] only."""\n'
+           '    pool._give(req.pages)\n')
+    findings = analyze_source(src)
+    assert [f.rule for f in findings] == ["ZL001"]
+    assert not findings[0].suppressed
+
+
+def test_parse_error_is_an_engine_finding():
+    (finding,) = analyze_source("def broken(:\n")
+    assert finding.rule == ENGINE_RULE
+    assert "parse error" in finding.message
+
+
+# ---------------------------------------------------------------------------
+# the CLI gate
+# ---------------------------------------------------------------------------
+
+def test_cli_clean_file_exits_zero(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert zenlint_main([str(clean)]) == 0
+    assert "zenlint: OK" in capsys.readouterr().out
+
+
+def test_cli_violation_exits_one_and_reports(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(VIOLATION.format(""))
+    assert zenlint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "ZL001" in out
+    assert "zenlint: FAIL" in out
+
+
+def test_cli_suppressed_finding_passes_but_is_counted(tmp_path, capsys):
+    ok = tmp_path / "ok.py"
+    ok.write_text(VIOLATION.format("  # zenlint: ignore[ZL001] -- why"))
+    assert zenlint_main([str(ok)]) == 0
+    assert "1 suppressed" in capsys.readouterr().out
+
+
+def test_cli_rule_filter_limits_rules(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(VIOLATION.format(""))
+    assert zenlint_main(["--rule", "ZL004", str(bad)]) == 0
+    assert zenlint_main(["--rule", "ZL001", str(bad)]) == 1
+
+
+def test_cli_unknown_rule_exits_two(capsys):
+    assert zenlint_main(["--rule", "ZL999", "unused"]) == 2
+    assert "ZL999" in capsys.readouterr().err
+
+
+def test_cli_list_rules(capsys):
+    assert zenlint_main(["--list-rules", "unused"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in RULE_IDS:
+        assert rule_id in out
+
+
+def test_cli_seeded_violation_fails_the_gate(capsys):
+    """The CI self-check: the gate MUST fail on the seeded file."""
+    seeded = FIXTURES / "seeded_violation.py"
+    assert zenlint_main([str(seeded)]) == 1
+    out = capsys.readouterr().out
+    assert "ZL001" in out
+    assert "ZL004" in out
+
+
+def test_repo_tree_is_gate_clean(capsys):
+    """The actual CI gate invocation, run as a local regression."""
+    paths = [str(REPO / p) for p in ("src", "benchmarks", "examples")]
+    assert zenlint_main(paths) == 0, capsys.readouterr().out

@@ -1,0 +1,14 @@
+"""Deliberately broken file for the CI self-check: the zenlint gate must
+exit non-zero on it, proving the gate actually fails when an invariant
+is violated (a gate that cannot fail gates nothing)."""
+
+
+def free_view_ids(pool, req):
+    pool._give(req.pages)  # EXPECT[ZL001]
+
+
+class SeededRunner:
+    def decode(self, req):
+        import jax.numpy as jnp
+        logits = jnp.exp(req.logits)
+        return logits.item()  # EXPECT[ZL004]

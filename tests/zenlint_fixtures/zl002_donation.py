@@ -1,0 +1,52 @@
+"""ZL002 fixtures: reading a buffer after jit donated it.
+
+Mirrors the PagedRunner shape: the jitted step is bound once in
+``__init__`` with ``donate_argnums``, and the KV page arrays are passed
+in -- after which the only safe read is through a rebinding from the
+call's own result.
+"""
+
+import jax
+
+
+def _decode_fn(params, toks, k_pages, v_pages):
+    return toks, k_pages, v_pages
+
+
+class FixtureRunner:
+    def __init__(self):
+        self._decode = jax.jit(_decode_fn, donate_argnums=(2, 3))
+
+    # -- violations ---------------------------------------------------------
+
+    def read_after_donation(self):
+        nxt, _, _ = self._decode(self.params, self.toks,
+                                 self.store.k_pages, self.store.v_pages)
+        return nxt, self.store.k_pages[0]  # EXPECT[ZL002]
+
+    def call_with_dead_buffer(self):
+        nxt, _, _ = self._decode(self.params, self.toks,
+                                 self.store.k_pages, self.store.v_pages)
+        self.snapshot(self.store.v_pages)  # EXPECT[ZL002]
+        return nxt
+
+    # -- correct idioms (must NOT be flagged) -------------------------------
+
+    def rebind_from_result(self):
+        nxt, self.store.k_pages, self.store.v_pages = self._decode(
+            self.params, self.toks,
+            self.store.k_pages, self.store.v_pages)
+        return nxt, self.store.k_pages[0]
+
+    def rebind_later_from_out(self):
+        out = self._decode(self.params, self.toks,
+                           self.store.k_pages, self.store.v_pages)
+        self.store.k_pages = out[1]
+        self.store.v_pages = out[2]
+        return self.store.k_pages[0], self.store.v_pages[0]
+
+    def undonated_args_stay_live(self):
+        nxt, self.store.k_pages, self.store.v_pages = self._decode(
+            self.params, self.toks,
+            self.store.k_pages, self.store.v_pages)
+        return nxt, self.params

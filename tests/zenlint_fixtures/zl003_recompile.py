@@ -1,0 +1,62 @@
+"""ZL003 fixtures: per-request values becoming jit compile keys.
+
+Hot-path scoping comes from the class/method naming convention
+(``*Runner.decode/prefill`` etc.), so the violating methods live on a
+``...Runner`` class and the same patterns outside a hot path are legal.
+"""
+
+import jax
+import numpy as np
+
+
+def _prefill_fn(params, toks, width):
+    return toks
+
+
+def _step_fn(toks):
+    return toks
+
+
+def _next_pow2(n):
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+class HazardRunner:
+    def __init__(self):
+        self._prefill = jax.jit(_prefill_fn, static_argnums=(2,))
+        self._step = jax.jit(_step_fn)
+
+    # -- violations ---------------------------------------------------------
+
+    def prefill(self, req):
+        return self._prefill(self.params, req.tokens, req.prompt_len)  # EXPECT[ZL003]
+
+    def _prefill_fn(self, req):
+        fresh = jax.jit(_step_fn)  # EXPECT[ZL003]
+        return fresh(req.tokens)
+
+    def decode(self, running, req):
+        toks = req.tokens
+        out = self._step(toks)  # EXPECT[ZL003]
+        buf = np.zeros((len(running), 8))  # EXPECT[ZL003]
+        return out, buf
+
+    # -- correct idioms (must NOT be flagged) -------------------------------
+
+    def _decode_fn(self, req):
+        width = _next_pow2(req.prompt_len)
+        staged = np.zeros((self.max_batch, 8))
+        padded = ((req.prompt_len + 7) // 8) * 8
+        return self._prefill(self.params, staged, width), padded
+
+
+class ColdHelper:
+    """Same patterns OUTSIDE a hot path: legal (setup code may stage
+    per-request shapes; it runs once, not per token)."""
+
+    def warmup(self, req):
+        probe = jax.jit(_step_fn)
+        return probe(np.zeros((req.prompt_len,)))

@@ -1,0 +1,49 @@
+"""ZL004 fixtures: host synchronization inside serving hot paths.
+
+Device values are names assigned from jitted callables or ``jnp.*``
+calls; the one legal sync idiom is a single batched ``np.asarray`` whose
+RESULT is then indexed host-side (the fetch itself is still flagged --
+the real runner carries the justified suppression).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode_fn(params, toks):
+    return toks
+
+
+class SyncRunner:
+    def __init__(self):
+        self._decode = jax.jit(_decode_fn)
+
+    # -- violations ---------------------------------------------------------
+
+    def decode(self, req):
+        logits = self._decode(self.params, req.tokens)
+        tok = logits.item()  # EXPECT[ZL004]
+        host = jax.device_get(logits)  # EXPECT[ZL004]
+        val = int(logits[0])  # EXPECT[ZL004]
+        if logits[0] > 0:  # EXPECT[ZL004]
+            tok = 0
+        return tok, host, val
+
+    def prefill(self, req):
+        probs = jnp.exp(req.logits)
+        return float(probs[0])  # EXPECT[ZL004]
+
+    # -- correct idioms (must NOT be flagged) -------------------------------
+
+    def _decode_fn(self, req):
+        logits = self._decode(self.params, req.tokens)
+        fetched = np.asarray(logits)  # EXPECT[ZL004]
+        first = int(fetched[0])
+        if fetched[0] > 0:
+            first += 1
+        return first
+
+    def report(self, req):
+        logits = self._decode(self.params, req.tokens)
+        return float(logits[0])
