@@ -28,6 +28,14 @@ arrays, the pre-aliasing behavior).  The metric is LIVE DEVICE KV BYTES
 token-identical output and equal TTFT.  Emitted as
 ``BENCH_serving_alias.json``.
 
+Part 5 (fig_prefix): the global prefix cache -- N requests whose prompts
+share a >=50% token prefix, served *cached* (refcounted copy-on-write
+prefix pages + suffix-only chunked prefill) vs *nocache* (same paged
+backend, every prompt prefilled in full) vs *dense* (the token-parity
+reference).  Metrics: prefill pages actually computed (the savings
+headline), prefix hit rate, COW copies, cache-owned shared pages, and
+mean TTFT.  Emitted as ``BENCH_serving_prefix.json``.
+
 Derived: completion wall time, pool utilization, denial/preempt counts.
 """
 
@@ -37,9 +45,16 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import emit_json, row, rows_mark
+    from benchmarks.common import (apply_host_settings, emit_json, row,
+                                   rows_mark)
 except ImportError:  # run as a script: benchmarks/ is sys.path[0]
-    from common import emit_json, row, rows_mark
+    from common import apply_host_settings, emit_json, row, rows_mark
+
+if __name__ == "__main__":
+    # before the repro/jax imports below: the tcmalloc re-exec must
+    # happen while it can still take effect (never when imported as a
+    # module -- re-execing the host pytest/run.py would be hostile)
+    apply_host_settings(reexec=True)
 from repro.core.history import HistoryStore
 from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.engine import ServingEngine
@@ -183,6 +198,70 @@ def run_alias(alias: bool, *, n_tenants: int = 4, n_req: int = 2,
     return live_bytes, len(stores), tokens, stats, wall
 
 
+def _prefix_requests(n: int, overlap: float, prompt: int, gen: int,
+                     vocab: int = 100):
+    """N requests whose prompts share the first ``overlap`` fraction of
+    tokens (explicit ``prompt_tokens``: the bench controls overlap, not
+    the req-id synthesizer)."""
+    rng = np.random.default_rng(7)
+    shared = tuple(int(x) for x in rng.integers(0, vocab,
+                                                int(prompt * overlap)))
+    reqs = []
+    for i in range(n):
+        sfx = np.random.default_rng(1000 + i).integers(
+            0, vocab, prompt - len(shared))
+        toks = shared + tuple(int(x) for x in sfx)
+        reqs.append(Request(f"px-r{i}", len(toks), gen, prompt_tokens=toks))
+    return reqs
+
+
+def run_prefix(arm: str, *, n: int = 8, overlap: float = 0.8,
+               prompt: int = 2 * PAGE_SIZE + 96, gen: int = 8,
+               pool_pages: int = 96, max_steps: int = 20_000):
+    """One tenant serving N >=50%-overlapping prompts.  Arms: ``cached``
+    (prefix cache on), ``nocache`` (same paged backend, full prefill),
+    ``dense`` (the token-parity reference).
+
+    Two phases: the first TWO requests run to completion as the warm-up
+    (cold insert + first hit, which also pays every jit trace), then the
+    remaining load is measured with windowed stats -- so the TTFT
+    comparison is the steady state, not the compile storm.  The prompt
+    deliberately ends mid-page and the overlap point falls inside a
+    page, so the copy-on-write path (partial-page divergence) is
+    exercised, not just whole-page reuse."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=pool_pages)
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name=f"prefix-{arm}", max_batch=4,
+        backend="dense" if arm == "dense" else "paged", policy="fixed",
+        cache_len=1024, prefix_cache=arm == "cached"))
+    reqs = _prefix_requests(n, overlap, prompt, gen)
+
+    def drive():
+        steps = 0
+        while h.step()["alive"] and steps < max_steps:
+            steps += 1
+
+    for r in reqs[:2]:
+        # sequential on purpose: concurrent warm-up requests would race
+        # the first insert (both miss); one completed cold request plus
+        # one completed hit covers every jit trace of both paths
+        h.submit_request(r)
+        drive()
+    snap = h.serving_stats()
+    for r in reqs[2:]:
+        h.submit_request(r)
+    t0 = time.perf_counter()
+    drive()
+    wall = (time.perf_counter() - t0) * 1e6
+    win = h.serving_stats(since=snap)
+    stats = h.serving_stats()
+    tokens = {r.req_id: tuple(r.output_tokens) for r in reqs
+              if r.output_tokens is not None}
+    h.release()
+    return wall, stats, win, tokens
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64,
@@ -258,6 +337,38 @@ def main() -> None:
         f"live_kv_saved={1 - 1 / max(ratio, 1e-9):.1%}")
     emit_json("serving_alias", extra={"smoke": args.smoke, "n_req": n_req,
                                       "gen": gen_a}, rows_from=mark)
+
+    # Part 5: global prefix cache -- prefill-page savings + TTFT at
+    # >=50% prompt overlap, token-exact across cached / nocache / dense
+    # (BENCH_serving_prefix.json)
+    mark = rows_mark()
+    n_px = 6 if args.smoke else 12
+    overlap = 0.8
+    res_px = {}
+    for arm in ("cached", "nocache", "dense"):
+        wall, stats, win, toks = run_prefix(arm, n=n_px, overlap=overlap)
+        res_px[arm] = (stats, win, toks)
+        derived = (f"completed={stats['completed']};"
+                   f"mean_ttft_us={win['mean_ttft_s'] * 1e6:.0f}")
+        if "prefill_pages_computed" in stats:
+            derived += f";prefill_pages={stats['prefill_pages_computed']}"
+        if arm == "cached":
+            derived += (f";prefix_hit_rate={stats['prefix_hit_rate']:.3f};"
+                        f"cow_copies={stats['cow_copies']};"
+                        f"shared_pages={stats['shared_pages']}")
+        row(f"fig_prefix/{arm}", wall, derived)
+    cached_pg = res_px["cached"][0]["prefill_pages_computed"]
+    nocache_pg = res_px["nocache"][0]["prefill_pages_computed"]
+    parity = int(res_px["cached"][2] == res_px["nocache"][2]
+                 == res_px["dense"][2] and len(res_px["cached"][2]) > 0)
+    ttft = {a: res_px[a][1]["mean_ttft_s"] for a in res_px}
+    row("fig_prefix/savings", 0.0,
+        f"prefill_page_saved_frac={1 - cached_pg / max(nocache_pg, 1):.3f};"
+        f"token_parity={parity};"
+        f"ttft_speedup={ttft['nocache'] / max(ttft['cached'], 1e-9):.2f}")
+    emit_json("serving_prefix",
+              extra={"smoke": args.smoke, "n": n_px, "overlap": overlap},
+              rows_from=mark)
 
 
 if __name__ == "__main__":

@@ -59,6 +59,8 @@ def rule_for(metric: str):
         return ("higher_worse", 0.0, 1.0)
     if metric == "kv_bytes_ratio":
         return ("lower_worse", 0.25, 0.0)
+    if metric == "prefix_hit_rate":
+        return ("lower_worse", 0.25, 0.05)
     if metric.endswith("_frac") or "saved" in metric:
         return ("lower_worse", 0.25, 0.10)
     return None

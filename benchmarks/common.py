@@ -15,6 +15,7 @@ Import note: drivers import this module as ``benchmarks.common`` with a
 (``PYTHONPATH=src python benchmarks/bench_x.py`` -- only ``benchmarks/``
 itself is on ``sys.path``) and as package modules (``run.py``, tests)."""
 
+import ctypes.util
 import json
 import os
 import sys
@@ -22,6 +23,64 @@ import time
 from typing import Callable, Dict, List, Optional
 
 _ROWS: List[Dict] = []
+
+#: XLA flags for run-to-run stability -- pin the host platform to ONE
+#: device (timings must not shard across a variable host core count)
+#: and serialize compilation (parallel compile contends with the timed
+#: region on CPU hosts).  Set only when the user has not chosen their
+#: own $XLA_FLAGS.
+_STABLE_XLA_FLAGS = ("--xla_force_host_platform_device_count=1 "
+                     "--xla_cpu_parallel_codegen_split_count=1")
+
+_HOST: Optional[Dict] = None
+
+
+def apply_host_settings(reexec: bool = False) -> Dict:
+    """Benchmark host hygiene (the classic TPU-repo ``run.sh`` settings),
+    applied ONCE per process and recorded in every artifact it emits.
+
+    * tcmalloc: page-pool churn is allocator-bound on the host side, and
+      glibc malloc jitter reads as perf regression noise.  A live process
+      cannot retrofit its allocator, so with ``reexec=True`` (bench
+      entry points ONLY, before importing jax) the process re-execs
+      itself once with ``LD_PRELOAD`` pointing at libtcmalloc when the
+      linker cache has one; the default records presence/activity
+      without touching the process (``emit_json`` calls from pytest or
+      CI wrappers must never re-exec);
+    * stable XLA flags: autotuning picks different kernels run-to-run --
+      pin the level via ``$XLA_FLAGS`` unless jax is already imported
+      (too late) or the caller set their own (their choice wins).
+
+    Idempotent; returns the applied-settings record (also stored in the
+    ``host`` key of every ``emit_json`` payload)."""
+    global _HOST
+    if _HOST is not None:
+        return _HOST
+    preload = os.environ.get("LD_PRELOAD", "")
+    tcmalloc = ctypes.util.find_library("tcmalloc")
+    if "jax" in sys.modules:
+        xla_applied = False           # too late: jax read $XLA_FLAGS
+    else:
+        xla_applied = "XLA_FLAGS" not in os.environ
+        os.environ.setdefault("XLA_FLAGS", _STABLE_XLA_FLAGS)
+        os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    if (reexec and tcmalloc and tcmalloc not in preload
+            and "jax" not in sys.modules
+            and not os.environ.get("_BENCH_HOST_REEXEC")):
+        os.environ["LD_PRELOAD"] = (preload + " " + tcmalloc).strip()
+        # no malloc warnings on numpy's big arena reservations
+        os.environ.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                              "60000000000")
+        os.environ["_BENCH_HOST_REEXEC"] = "1"   # one hop, even if the
+        os.execv(sys.executable, [sys.executable] + sys.argv)  # preload
+        # fails to take (missing lib would otherwise loop forever)
+    _HOST = {
+        "tcmalloc": tcmalloc or "",
+        "tcmalloc_active": bool(tcmalloc and tcmalloc in preload),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "xla_flags_applied": xla_applied,
+    }
+    return _HOST
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
@@ -61,6 +120,7 @@ def emit_json(bench: str, extra: Optional[Dict] = None,
         "unix_time": int(time.time()),
         "rows": list(_ROWS[rows_from:]),
         "extra": extra or {},
+        "host": apply_host_settings(),
     }
     path = os.path.join(out_dir, f"BENCH_{bench}.json")
     tmp = path + ".tmp"

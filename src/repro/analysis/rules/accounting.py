@@ -10,6 +10,13 @@ any of these on the floor is how pages get stranded and parked apps
 become unresumable -- silently, because the accounting still "adds up"
 until the next unpark.
 
+The prefix cache adds three more receipt verbs: ``pin`` returns the
+match (pinned node chain + physical pages) that MUST later be unpinned,
+``unpin`` returns how many refcounts hit zero (the eviction-eligibility
+signal the caller folds into stats), and ``cow_grant`` returns the
+granted copy-target page or ``None`` -- ignoring it either leaks the
+page or dereferences a failed grant.
+
 This rule flags, per function:
 
 * a receipt-bearing call used as a bare expression statement (the
@@ -28,7 +35,8 @@ from typing import Dict, Iterator, Optional, Tuple
 
 from repro.analysis.engine import Module, Rule, dotted, stmt_exprs
 
-RECEIPT_CALLS = {"reclaim", "drain", "park", "regrant"}
+RECEIPT_CALLS = {"reclaim", "drain", "park", "regrant",
+                 "pin", "unpin", "cow_grant"}
 
 
 def _leaf(path: Optional[str]) -> Optional[str]:

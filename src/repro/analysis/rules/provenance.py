@@ -18,6 +18,15 @@ This rule flow-tracks both taints per function and flags:
   ``req.pages.extend(phys)``) -- requests must only ever hold view ids;
 * a physical value translated *again* through ``to_physical*`` -- double
   translation reads some other tenant's pages when ids happen to alias.
+
+The prefix cache (serving/prefix_cache.py) introduces a SECOND class of
+physical ids that legitimately lives on requests: ``req.shared_pages``
+holds cache-owned physical page ids (and ``PrefixMatch.phys_pages`` is
+their source).  These are recognized provenance sources -- reading them
+taints PHYS, so translating them again or freeing them as view ids is
+flagged -- and the dual sinks hold: a VIEW value assigned or extended
+into ``shared_pages`` is flagged (the cache speaks physical only;
+``cache_donate`` is the conversion, ``cow_grant`` returns view ids).
 """
 
 from __future__ import annotations
@@ -30,15 +39,21 @@ from repro.analysis.engine import Module, Rule, dotted, stmt_calls
 VIEW = "view-local"
 PHYS = "physical"
 
-#: grant APIs: whatever they return is what requests hold (view ids)
-VIEW_CALLS = {"_alloc", "_alloc_local", "_new_ids"}
-#: translation / physical-side APIs: results are physical ids
+#: grant APIs: whatever they return is what requests hold (view ids);
+#: cow_grant is a one-page grant from the request's own pool/view
+VIEW_CALLS = {"_alloc", "_alloc_local", "_new_ids", "cow_grant"}
+#: translation / physical-side APIs: results are physical ids;
+#: cache_donate converts view ids to physical as ownership moves to the
+#: prefix cache
 PHYS_CALLS = {"to_physical", "to_physical_local", "_phys", "_phys_local",
-              "reclaim", "_take"}
+              "reclaim", "_take", "cache_donate"}
 #: remap tables: indexing or popping one yields a physical id
 REMAP_NAMES = {"_remap", "_remap_local"}
 #: request attributes that hold view-local ids
 REQ_ID_ATTRS = ("pages", "local_pages")
+#: attributes that hold cache-owned PHYSICAL ids (prefix cache): reading
+#: one taints physical; writing view ids into one is a sink
+PHYS_ATTRS = ("shared_pages", "phys_pages")
 #: physical-side free lists: extending one with view ids corrupts the pool
 PHYS_FREE_NAMES = {"free_local"}
 
@@ -63,6 +78,8 @@ class PageIdProvenance(Rule):
                 return None
             if d in env:
                 return env[d]
+            if _leaf(d) in PHYS_ATTRS and "." in d:
+                return PHYS
             if _leaf(d) in REQ_ID_ATTRS and "." in d:
                 return VIEW
             return None
@@ -144,6 +161,13 @@ class PageIdProvenance(Rule):
                        f"physical ids appended to {base}: requests must "
                        "hold view-local ids only (grants already return "
                        "them)")
+            if (base is not None and _leaf(base) in PHYS_ATTRS
+                    and "." in base and call.args
+                    and self._taint(call.args[0], env) == VIEW):
+                yield (call.lineno,
+                       f"view-local ids appended to {base}: the prefix "
+                       "cache holds PHYSICAL ids only -- convert via "
+                       "cache_donate()/to_physical() first")
 
     # -- driver -------------------------------------------------------------
     def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
@@ -178,6 +202,13 @@ class PageIdProvenance(Rule):
                                    f"physical ids stored on {d}: requests "
                                    "must hold view-local ids (the remap is "
                                    "the isolation boundary)")
+                        if (_leaf(d) in PHYS_ATTRS and "." in d
+                                and t == VIEW):
+                            yield (stmt.lineno,
+                                   f"view-local ids stored on {d}: the "
+                                   "prefix cache's pages are PHYSICAL -- "
+                                   "a view id here reads another tenant's "
+                                   "pages when ids alias")
                         if t is None:
                             env.pop(d, None)
                         else:

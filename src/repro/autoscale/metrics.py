@@ -28,7 +28,8 @@ from repro.serving.engine import EngineStats
 ENGINE_COUNTERS = EngineStats.COUNTERS
 
 #: monotonic counters inside its ``pool`` sub-dict (PagePool.stats)
-POOL_COUNTERS = ("grants", "grant_pages", "denials", "scaleups", "released")
+POOL_COUNTERS = ("grants", "grant_pages", "denials", "scaleups", "released",
+                 "prefix_unpinned", "prefix_evictions")
 
 
 def stats_delta(cur: Dict, since: Dict) -> Dict:

@@ -117,14 +117,25 @@ def unpark_app(handle) -> Dict:
         view.parked = False
     restored: List[ParkedRequest] = []
     requeued: List[ParkedRequest] = []
+    runner = handle.runner
+    reattach = getattr(runner, "prefix_reattach", None)
     for pr in parked.requests:
+        # the park snapshot holds only PRIVATE pages; a request that was
+        # decoding through shared prefix pages must re-pin the same token
+        # chain first (the cache may have evicted it while parked --
+        # then the snapshot is a torso without its head, so recompute)
+        if reattach is not None and not reattach(pr.req):
+            eng.pool.prefix_detach(pr.req)
+            requeued.append(pr)
+            continue
         ok = eng.pool.regrant(pr.req, pr.num_pages, pr.num_local_pages)
         while not ok:
             if not eng._reclaim():
                 break
             ok = eng.pool.regrant(pr.req, pr.num_pages, pr.num_local_pages)
+        if not ok:
+            eng.pool.prefix_detach(pr.req)
         (restored if ok else requeued).append(pr)
-    runner = handle.runner
     if runner is not None:
         runner.unpark(parked.runner_state, [pr.req for pr in restored])
         if "params" in handle.exec_state:

@@ -18,6 +18,16 @@ slot ``p % (max_pages * page_size)``, so a slot's absolute position is
 recovered as the latest ``p' <= pos`` congruent to the slot index
 (modulo the ring size), exactly mirroring the dense ring cache in
 ``models/attention.self_attention_decode``.
+
+Prefix-cache interaction (serving/prefix_cache.py): a request's page
+table may MIX two id classes -- leading entries that are cache-owned
+PHYSICAL page ids (refcounted, read-only prefix pages shared across
+requests and tenants) followed by view-translated private ids.  The
+kernel is oblivious: both classes index the same pool-sized arrays, and
+decode only ever *writes* the private tail (the write position ``p``
+satisfies ``p // page_size >= len(shared_pages)``), so shared pages are
+strictly read-only here.  Nothing in the kernel changes; this note
+exists because the table is no longer uniformly view-local.
 """
 
 from __future__ import annotations

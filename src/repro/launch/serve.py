@@ -43,6 +43,11 @@ def main():
                          "pool-sized device KV arrays instead of "
                          "aliasing the pod's shared same-shape array "
                          "set (benchmark baseline; tokens identical)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged backend: refcounted copy-on-write prefix "
+                         "cache -- repeated prompt prefixes reuse cached "
+                         "KV pages and prefill computes only the suffix "
+                         "(rejected on dense: no shareable page identity)")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
     ap.add_argument("--autoscale", action="store_true",
@@ -53,6 +58,9 @@ def main():
     if args.backend != "dense" and not args.reduced:
         ap.error("--backend needs --reduced: the default arm serves through "
                  "the NullExecutor (no model, no kernel path)")
+    if args.prefix_cache and args.backend != "paged":
+        ap.error("--prefix-cache needs --backend paged: the dense cache "
+                 "has no page identity to share across requests")
 
     cfg = get_config(args.arch)
     mesh_spec = MESHES[args.mesh]
@@ -66,6 +74,7 @@ def main():
                                 backend=args.backend,
                                 swa_rings=not args.no_swa_rings,
                                 alias_kv=not args.no_alias_kv,
+                                prefix_cache=args.prefix_cache,
                                 private_pool=args.private_pool)
         prompt_rng = (8, 64)
         max_new = 16

@@ -130,6 +130,23 @@ class AppHandle:
             out["kv_device_bytes"] = runner.store.device_bytes()
             out["kv_aliased"] = bool(getattr(runner, "shared_kv", False))
             out["kv_store_key"] = runner.store.key
+        if runner is not None and hasattr(runner, "prefill_pages_computed"):
+            # pages actually computed by prefill (cache hits subtract):
+            # the fig_prefix bench's savings numerator, so it must exist
+            # on the no-cache arm too
+            out["prefill_pages_computed"] = runner.prefill_pages_computed
+        cache = getattr(runner, "prefix", None) if runner is not None else None
+        if cache is not None:
+            # global prefix cache: lifetime counters plus the two gauges
+            # the fig_prefix bench gates on.  shared_pages counts cache-
+            # owned PHYSICAL pages -- excluded from every view's quota but
+            # still inside the pod's used_pages (they are not free).
+            out["prefix"] = dict(cache.stats)
+            out["prefix_lookups"] = cache.stats["lookups"]
+            out["prefix_hits"] = cache.stats["hits"]
+            out["prefix_hit_rate"] = cache.hit_rate
+            out["cow_copies"] = cache.stats["cow_copies"]
+            out["shared_pages"] = cache.num_pages
         shared = getattr(pool, "shared", None)
         if shared is not None:
             out["shared_pool"] = {

@@ -208,6 +208,8 @@ class JaxExecutor(Executor):
         from repro.serving.model_runner import (KVArrayStore, PagedRunner,
                                                 build_runner, kv_shape_key)
 
+        from repro.serving.prefix_cache import PrefixCache
+
         app = handle.app
         opts = app.options
         max_batch = int(opts.get("max_batch", 4))
@@ -231,11 +233,34 @@ class JaxExecutor(Executor):
                 kv_store = pool.shared.kv_store(
                     key, lambda: KVArrayStore(key))
                 pool.bind_kv_store(kv_store)
+            prefix_cache = None
+            if bool(opts.get("prefix_cache", False)) and backend == "paged":
+                if kv_store is not None:
+                    # pod-global cache: keyed by (kv shape, model, seed)
+                    # -- same-weights tenants share cached prefixes, and
+                    # the cache's pages return to the POD free list
+                    ck = (kv_store.key, app.config.name, self.seed)
+                    shared = pool.shared
+                    prefix_cache = shared.prefix_cache(
+                        ck, lambda: PrefixCache(ck, shared._give))
+                    prefix_cache.users.add(app.name)
+                else:
+                    # private pool (or un-aliased tenant): a private cache
+                    # still dedups this app's own prompt overlap
+                    prefix_cache = PrefixCache(
+                        (None, app.config.name, self.seed),
+                        pool.free.extend)
+                pool.prefix_cache = prefix_cache
+            elif bool(opts.get("prefix_cache", False)):
+                # dense backend: reject loudly inside build_runner below
+                prefix_cache = PrefixCache((None,), lambda pages: None)
             runner = build_runner(backend, app.config,
                                   seed=self.seed, max_batch=max_batch,
                                   cache_len=int(opts.get("cache_len", 256)),
                                   pool_pages=pool.physical_pages,
-                                  use_rings=use_rings, kv_store=kv_store)
+                                  use_rings=use_rings, kv_store=kv_store,
+                                  prefix_cache=prefix_cache,
+                                  chunk_pages=int(opts.get("chunk_pages", 4)))
         except Exception:
             # the pool view is already registered on the pod: an orphan
             # would dilute every tenant's fair share forever (close also

@@ -116,6 +116,7 @@ class ServingEngine:
 
     def _admit(self) -> List[Request]:
         admitted = []
+        attach = getattr(self.runner, "prefix_attach", None)
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
             if not self.pool.admissible(req):
@@ -126,7 +127,14 @@ class ServingEngine:
                 req.state = "rejected"
                 self.stats.rejected += 1
                 continue
+            if attach is not None:
+                # prefix-cache lookup+pin BEFORE the grant: a hit shrinks
+                # the private-page need try_admit charges the quota for
+                attach(req)
             if not self.pool.try_admit(req):
+                # no grant, no pin: a queued request must not hold cache
+                # pages against eviction while it waits
+                self.pool.prefix_detach(req)
                 break
             self.queue.popleft()
             self.running.append(req)

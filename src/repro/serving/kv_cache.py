@@ -89,6 +89,24 @@ class Request:
     # completed output (prefill token + decoded tokens); the runner hands
     # ownership back here on completion so its `generated` dict can evict
     output_tokens: Optional[List[int]] = None
+    # -- global prefix cache (serving/prefix_cache.py) -----------------------
+    # PHYSICAL page ids of the read-only cached-prefix pages this request
+    # references (never view-local: cache pages belong to no view).  They
+    # form the leading entries of the decode page table, ahead of the
+    # view-translated private pages, and are excluded from quota charging.
+    shared_pages: List[int] = field(default_factory=list)
+    # prompt tokens covered by the cache at attach time (prefill skips them)
+    cached_len: int = 0
+    # physical page to copy-on-write the partial lead from (cached_len %
+    # PAGE_SIZE tokens land in the request's first private page)
+    cow_src_page: Optional[int] = None
+    # pinned PrefixNode chain; the pool unpins on release/reclaim
+    prefix_nodes: Optional[list] = None
+    # how many shared pages a parked request must re-pin on unpark
+    parked_shared: int = 0
+    # explicit prompt (bench/test prompt-overlap control); when None the
+    # runner synthesizes from req_id as before
+    prompt_tokens: Optional[Tuple[int, ...]] = None
 
     @property
     def length(self) -> int:
@@ -124,7 +142,12 @@ class PagePool:
         self._sizing: Optional[SizingSolution] = None
         self._solve_counter = 0
         self.stats = {"grants": 0, "grant_pages": 0, "denials": 0,
-                      "scaleups": 0, "released": 0}
+                      "scaleups": 0, "released": 0, "prefix_unpinned": 0,
+                      "prefix_evictions": 0}
+        # bound by the executor when the app opts into prefix caching; a
+        # private pool owns its cache outright, a PoolView aliases the
+        # pod-level one registered on the SharedPagePool
+        self.prefix_cache = None
         # per-layer-group accounting (sliding-window rings).  The local
         # group's pages index a DISJOINT set of per-layer device arrays,
         # so they come from their own id space over the same pool size.
@@ -149,11 +172,13 @@ class PagePool:
         return self.groups.ring_pages if self.groups else 0
 
     def _global_need(self, req: Request, horizon: int = 0) -> int:
-        """Pages the growing (global-group) table needs; zero for a stack
-        with no global-KV layers at all."""
+        """PRIVATE pages the growing (global-group) table needs; zero for
+        a stack with no global-KV layers at all.  Prefix-cache shared
+        pages already back the leading table entries, so they are not
+        charged against the request (or its view quota) again."""
         if self.groups is not None and self.groups.global_layers == 0:
             return 0
-        return req.pages_needed(horizon)
+        return max(req.pages_needed(horizon) - len(req.shared_pages), 0)
 
     # -- sizing policy ------------------------------------------------------
     def sizing(self) -> SizingSolution:
@@ -175,7 +200,13 @@ class PagePool:
 
     # -- physical allocation primitives (overridden by tenancy.PoolView) ----
     def _alloc(self, n: int) -> Optional[List[int]]:
-        """Take n physical pages, or None when they can't be granted."""
+        """Take n physical pages, or None when they can't be granted.
+        Under pool pressure, refcount-0 prefix-cache pages are the first
+        victims (LRU) -- cold cached prefixes yield to live requests, but
+        pinned nodes are never touched."""
+        if n > len(self.free) and self.prefix_cache is not None:
+            freed = self.prefix_cache.evict_lru(n - len(self.free))
+            self.stats["prefix_evictions"] += freed
         if n > len(self.free):
             return None
         return [self.free.pop() for _ in range(n)]
@@ -196,6 +227,41 @@ class PagePool:
     def _page_cap(self) -> int:
         """Hard page ceiling a single request can ever hold."""
         return self.num_pages
+
+    # -- prefix-cache lifecycle (serving/prefix_cache.py) --------------------
+    def cow_grant(self) -> Optional[List[int]]:
+        """One page for a copy-on-write split: the caller copies a cached
+        page's lead slots here before writing past them.  Returns the
+        granted id list (view-local under a PoolView) or None under
+        pressure -- a receipt the caller MUST consume (ZL005): dropping
+        it either leaks the page or skips the None check."""
+        return self._alloc(1)
+
+    def cache_donate(self, ids: Sequence[int]) -> List[int]:
+        """Move pages out of request accounting into prefix-cache
+        ownership, returning their PHYSICAL ids.  A private pool's ids
+        are already physical and the pages simply stay off the free list
+        (the cache's free_fn puts them back on eviction); a PoolView
+        additionally uncharges its quota and forgets the remap."""
+        return list(ids)
+
+    def prefix_detach(self, req: Request, keep: bool = False) -> int:
+        """Unpin a request's prefix-cache nodes (idempotent).  Returns
+        how many nodes dropped to refcount 0, folded into stats.  With
+        ``keep`` (the park path) the attach bookkeeping needed for
+        unpark re-attachment survives; otherwise the request forgets its
+        cached prefix entirely."""
+        released = 0
+        if req.prefix_nodes and self.prefix_cache is not None:
+            released = self.prefix_cache.unpin(req.prefix_nodes)
+            self.stats["prefix_unpinned"] += released
+        req.prefix_nodes = None
+        req.shared_pages = []
+        req.cow_src_page = None
+        if not keep:
+            req.cached_len = 0
+            req.parked_shared = 0
+        return released
 
     # -- id translation (overridden by tenancy.PoolView) ---------------------
     def to_physical(self, ids: Sequence[int]) -> List[int]:
@@ -301,6 +367,7 @@ class PagePool:
         return True
 
     def release(self, req: Request) -> None:
+        self.prefix_detach(req)
         self._dealloc(req.pages)
         self._dealloc_local(req.local_pages)
         self.stats["released"] += 1
@@ -326,6 +393,11 @@ class PagePool:
         phys_local = self.to_physical_local(held_local)
         self._dealloc(held)
         self._dealloc_local(held_local)
+        # the park snapshot covers ONLY private pages: shared prefix pages
+        # are unpinned here (they may be evicted while parked) and unpark
+        # re-pins the same token chain -- or recomputes if it was evicted
+        req.parked_shared = len(req.shared_pages)
+        self.prefix_detach(req, keep=True)
         req.state = "parked"
         return phys, phys_local
 

@@ -143,6 +143,17 @@ def synth_prompt(req_id: str, prompt_len: int, vocab: int) -> jax.Array:
                               0, vocab)
 
 
+def prompt_for(req: Request, vocab: int) -> jax.Array:
+    """(1, prompt_len) prompt tokens for a request.  An explicit
+    ``req.prompt_tokens`` (benchmarks/tests controlling prompt overlap)
+    wins; otherwise the usual deterministic synthesis.  BOTH backends go
+    through here, so dense-vs-paged parity holds for either source."""
+    if req.prompt_tokens is not None:
+        assert len(req.prompt_tokens) == req.prompt_len
+        return jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
+    return synth_prompt(req.req_id, req.prompt_len, vocab)
+
+
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
@@ -236,7 +247,7 @@ class DenseRunner(ModelRunner):
         self.slots: Dict[str, Any] = {}
 
     def prefill(self, req: Request) -> None:
-        toks = synth_prompt(req.req_id, req.prompt_len, self.cfg.vocab_size)
+        toks = prompt_for(req, self.cfg.vocab_size)
         # zenlint: ignore[ZL003] -- dense prefill compiles per distinct
         # prompt length BY DESIGN: this backend also serves recurrent
         # families (SSM/RWKV) whose prefill state after padded tokens
@@ -332,7 +343,8 @@ class PagedRunner(ModelRunner):
     def __init__(self, cfg: ModelConfig, *, seed: int = 0,
                  pool_pages: int = 128, max_batch: int = 4,
                  use_rings: bool = True,
-                 kv_store: Optional[KVArrayStore] = None):
+                 kv_store: Optional[KVArrayStore] = None,
+                 prefix_cache=None, chunk_pages: int = 4):
         super().__init__()
         if (any(k not in self.SUPPORTED_KINDS for k in cfg.pattern)
                 or cfg.rope_theta <= 0 or cfg.is_encdec
@@ -346,6 +358,13 @@ class PagedRunner(ModelRunner):
         self.max_batch = max_batch
         self.groups = PageGroups.from_config(cfg)
         self.use_rings = use_rings and self.groups.local_layers > 0
+        if prefix_cache is not None and self.groups.local_layers > 0:
+            raise ValueError(
+                f"prefix_cache=True needs a pure-global attention stack: "
+                f"{cfg.name} has sliding-window layers whose ring pages "
+                "cannot hold a position-stable shared prefix")
+        self.prefix = prefix_cache
+        self.chunk_pages = max(int(chunk_pages), 1)
         self.model = build_model(cfg, ImplConfig(remat="none"))
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
         nb, pat = cfg.num_blocks, len(cfg.pattern)
@@ -372,11 +391,17 @@ class PagedRunner(ModelRunner):
         # attribute counts XLA compiles, not calls (regression-tested)
         self.decode_traces = 0
         self.prefill_traces = 0
+        # prefill work actually computed, in pages (the prefix cache's
+        # savings metric: cached pages never reach this counter)
+        self.prefill_pages_computed = 0
+        self.reattach_unpins = 0
         # page arrays are donated: XLA updates them in place instead of
         # copying the whole pool per layer per token
         self._decode = jax.jit(self._decode_fn, donate_argnums=(9, 10))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(6, 7))
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(8, 9))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0, 1))
+        self._copy = jax.jit(self._copy_fn, donate_argnums=(0, 1))
 
     # the arrays live on the (possibly pod-shared) store; runner code and
     # tests read them through these aliases
@@ -410,6 +435,22 @@ class PagedRunner(ModelRunner):
     def _scatter_fn(kp, vp, pages, k, v):
         return (kp.at[pages].set(k.astype(KV_DTYPE)),
                 vp.at[pages].set(v.astype(KV_DTYPE)))
+
+    @staticmethod
+    def _copy_fn(kp, vp, src, dst):
+        """Copy-on-write page duplication (one layer's arrays, donated)."""
+        return kp.at[dst].set(kp[src]), vp.at[dst].set(vp[src])
+
+    def _cow_copy(self, src_phys: int, dst_phys: int) -> None:
+        """Duplicate one physical page's KV across every layer (the
+        insert-time self-COW: the donor keeps writing into the copy while
+        the original becomes a read-only cached partial page)."""
+        s = jnp.asarray(src_phys, jnp.int32)
+        d = jnp.asarray(dst_phys, jnp.int32)
+        for layer in range(self.num_layers):
+            (self.store.k_pages[layer],
+             self.store.v_pages[layer]) = self._copy(
+                self.store.k_pages[layer], self.store.v_pages[layer], s, d)
 
     def _block_forward(self, bp, x, positions, mix):
         """One pattern block (the shared prefill/decode layer body).
@@ -472,12 +513,24 @@ class PagedRunner(ModelRunner):
         """Forward over the prompt, scattering its KV page-by-page into
         the request's granted pages (global page p holds tokens
         [p*PAGE, (p+1)*PAGE); ring layers keep the last ``ring_pages``
-        prompt pages at their ring slots)."""
+        prompt pages at their ring slots).
+
+        Pure-global stacks route through the CHUNKED path when a prefix
+        cache is attached (suffix-only prefill + insert) or when the
+        prompt exceeds one chunk (fixed-size chunks reuse O(chunk *
+        log pool) compile buckets instead of one shape per prompt page
+        count -- the PR 4 compile-key follow-up)."""
         assert req.pages or req.local_pages, \
             f"{req.req_id}: prefill before admission"
         cfg = self.cfg
-        toks = synth_prompt(req.req_id, req.prompt_len, cfg.vocab_size)
         n_pg = -(-req.prompt_len // PAGE_SIZE)
+        if (self.groups.local_layers == 0
+                and (self.prefix is not None or n_pg > self.chunk_pages)):
+            self._prefill_chunked(req)
+            if self.prefix is not None:
+                self._prefix_insert(req)
+            return
+        toks = prompt_for(req, cfg.vocab_size)
         pad = n_pg * PAGE_SIZE - req.prompt_len
         if pad:
             toks = jnp.pad(toks, ((0, 0), (0, pad)))
@@ -499,9 +552,224 @@ class PagedRunner(ModelRunner):
             self.params, toks, jnp.asarray(req.prompt_len - 1, jnp.int32),
             jnp.asarray(g_ids), jnp.asarray(l_ids), jnp.asarray(l_src),
             self.store.k_pages, self.store.v_pages)
+        self.prefill_pages_computed += n_pg
         # zenlint: ignore[ZL004] -- first-token extraction: once per
         # request at prefill, the designed sync point (see DenseRunner).
         self.generated[req.req_id] = [int(nxt)]
+
+    # -- chunked / suffix-only prefill (pure-global stacks) ------------------
+    def _chunk_fn(self, params, toks, lead, base, last, g_ids, cow_src,
+                  ctx_table, k_pages, v_pages):
+        """One prefill chunk: forward over ``toks`` (page-aligned chunk
+        starting at absolute position ``base``), scatter its KV into the
+        ``g_ids`` pages, and attend over (cached or earlier-chunk)
+        context pages named by ``ctx_table`` (-1 padded, width bucketed)
+        plus the chunk itself.
+
+        Copy-on-write is FUSED: the first ``lead`` slots of chunk page 0
+        are replaced with the cached partial page ``cow_src``'s content
+        before scatter+attention, so one donated op yields a private page
+        holding cached-lead + computed-suffix, and the attention keys for
+        those positions are the true cached KV.  Cold path: lead=0,
+        cow_src=trash, all-(-1) context.
+
+        Compile key: (chunk page count, context-table bucket) only --
+        lead/base/last/cow_src are traced scalars, so warm and cold
+        prefills of any offset share compiles."""
+        self.prefill_traces += 1
+        cfg = self.cfg
+        s = toks.shape[1]
+        n_pg = s // PAGE_SIZE
+        w = ctx_table.shape[0]
+        positions = base + jnp.arange(s)
+        k_pos = jnp.concatenate([jnp.arange(w * PAGE_SIZE), positions])
+        k_valid = jnp.concatenate(
+            [jnp.repeat(ctx_table >= 0, PAGE_SIZE),
+             jnp.ones(s, bool)])
+        lead_mask = (jnp.arange(PAGE_SIZE) < lead)[:, None, None]
+        x = self.model._embed(params, toks)
+        new_k, new_v = list(k_pages), list(v_pages)
+        for layer in range(len(new_k)):
+            j, i = divmod(layer, len(cfg.pattern))
+            kind = cfg.pattern[i]
+            bp = jax.tree.map(lambda a: a[j],
+                              params["blocks"][f"p{i}_{kind}"])
+
+            def mix(q, k, v, layer=layer):
+                kpg = k[0].reshape(n_pg, PAGE_SIZE, cfg.num_kv_heads,
+                                   cfg.head_dim)
+                vpg = v[0].reshape(n_pg, PAGE_SIZE, cfg.num_kv_heads,
+                                   cfg.head_dim)
+                kpg = kpg.at[0].set(jnp.where(
+                    lead_mask, new_k[layer][cow_src].astype(k.dtype),
+                    kpg[0]))
+                vpg = vpg.at[0].set(jnp.where(
+                    lead_mask, new_v[layer][cow_src].astype(v.dtype),
+                    vpg[0]))
+                new_k[layer] = new_k[layer].at[g_ids].set(
+                    kpg.astype(KV_DTYPE))
+                new_v[layer] = new_v[layer].at[g_ids].set(
+                    vpg.astype(KV_DTYPE))
+                # context pages are read back AFTER the scatter: they are
+                # disjoint from g_ids (strictly earlier absolute pages),
+                # so the gather sees cached/earlier-chunk KV only
+                ctx_k = new_k[layer][jnp.maximum(ctx_table, 0)].reshape(
+                    1, w * PAGE_SIZE, cfg.num_kv_heads,
+                    cfg.head_dim).astype(k.dtype)
+                ctx_v = new_v[layer][jnp.maximum(ctx_table, 0)].reshape(
+                    1, w * PAGE_SIZE, cfg.num_kv_heads,
+                    cfg.head_dim).astype(v.dtype)
+                k_cat = jnp.concatenate(
+                    [ctx_k, kpg.reshape(1, s, cfg.num_kv_heads,
+                                        cfg.head_dim)], axis=1)
+                v_cat = jnp.concatenate(
+                    [ctx_v, vpg.reshape(1, s, cfg.num_kv_heads,
+                                        cfg.head_dim)], axis=1)
+                return attn.sdpa(q, k_cat, v_cat, causal=True,
+                                 q_positions=positions, k_positions=k_pos,
+                                 k_valid=k_valid)
+
+            x = self._block_forward(bp, x, positions, mix)
+        x = T.apply_norm(cfg, params["ln_f"], x)
+        xl = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        logits = L.unembed(params["embed"], xl, cfg.logit_softcap)
+        return jnp.argmax(logits[0, -1]), new_k, new_v
+
+    def _prefill_chunked(self, req: Request) -> None:
+        """Suffix-only prefill in absolute-grid chunks.  The first
+        ``req.cached_len`` prompt tokens are already in cache pages
+        (``req.shared_pages`` + a COW lead); computation starts at the
+        cached page boundary and each chunk ends on a multiple of
+        ``chunk_pages`` -- warm and cold runs of the same prompt see
+        IDENTICAL chunk boundaries past the cached region, so their
+        attention math (and tokens) agree exactly."""
+        cfg = self.cfg
+        toks = prompt_for(req, cfg.vocab_size)
+        total_pg = -(-req.prompt_len // PAGE_SIZE)
+        pad = total_pg * PAGE_SIZE - req.prompt_len
+        if pad:
+            toks = jnp.pad(toks, ((0, 0), (0, pad)))
+        cached = req.cached_len
+        pages_all = list(req.shared_pages) + self._phys(req.pages)
+        assert len(pages_all) >= total_pg, \
+            f"{req.req_id}: {len(pages_all)} pages < prompt {total_pg}"
+        p = cached // PAGE_SIZE        # == len(req.shared_pages)
+        nxt = None
+        while p < total_pg:
+            n_pg = min(self.chunk_pages - p % self.chunk_pages,
+                       total_pg - p)
+            s0 = p * PAGE_SIZE
+            lead = cached - s0 if s0 < cached else 0
+            ctx_w = _next_pow2(max(p, 1))
+            ctx = np.full(ctx_w, -1, np.int32)
+            ctx[:p] = pages_all[:p]
+            g_ids = np.asarray(pages_all[p:p + n_pg], np.int32)
+            last = min(req.prompt_len - 1 - s0, n_pg * PAGE_SIZE - 1)
+            cow_id = (req.cow_src_page
+                      if lead and req.cow_src_page is not None
+                      else self.trash_page)
+            nxt, self.store.k_pages, self.store.v_pages = self._chunk(
+                self.params, toks[:, s0:s0 + n_pg * PAGE_SIZE],
+                jnp.asarray(lead, jnp.int32), jnp.asarray(s0, jnp.int32),
+                jnp.asarray(last, jnp.int32), jnp.asarray(g_ids),
+                jnp.asarray(cow_id, jnp.int32), jnp.asarray(ctx),
+                self.store.k_pages, self.store.v_pages)
+            self.prefill_pages_computed += n_pg
+            p += n_pg
+        if self.prefix is not None and cached % PAGE_SIZE:
+            # partial-page hit: the fused lead copy above IS the COW
+            self.prefix.stats["cow_copies"] += 1
+        # zenlint: ignore[ZL004] -- first-token extraction: once per
+        # request at prefill, the designed sync point (see DenseRunner).
+        self.generated[req.req_id] = [int(nxt)]
+
+    # -- prefix-cache lifecycle ----------------------------------------------
+    def _host_prompt(self, req: Request) -> Tuple[int, ...]:
+        """The request's prompt token ids as a host tuple (the trie key).
+        Synthesized prompts are fetched from device ONCE per request and
+        memoized on ``req.prompt_tokens``, which also pins the prompt for
+        parking's re-attach lookup."""
+        if req.prompt_tokens is None:
+            toks = synth_prompt(req.req_id, req.prompt_len,
+                                self.cfg.vocab_size)
+            req.prompt_tokens = tuple(
+                int(t) for t in np.asarray(toks[0]))
+        return req.prompt_tokens
+
+    def prefix_attach(self, req: Request) -> None:
+        """Pre-admission lookup+pin: match the prompt against the trie,
+        pin the chain, and record the shared-page layout on the request
+        so the pool charges only the private suffix.  The engine calls
+        this right before ``try_admit`` and detaches (pool-side) if
+        admission fails."""
+        if self.prefix is None or req.prefix_nodes is not None:
+            return
+        m = self.prefix.pin(self._host_prompt(req),
+                            max_len=req.prompt_len - 1)
+        req.prefix_nodes = m.nodes
+        req.shared_pages = list(m.phys_pages)
+        req.cached_len = m.cached_len
+        req.cow_src_page = m.cow_src
+
+    def _prefix_insert(self, req: Request) -> None:
+        """Post-prefill donation: move the prompt's freshly computed full
+        pages out of the view's accounting into the cache (the request
+        keeps referencing them, now as pinned shared pages), and donate
+        the partial tail page after a self-COW (grant a replacement page,
+        copy the tail into it, hand the original to the cache).  A race
+        -- another request inserted the same prefix this tick -- adopts
+        nothing: probe_new sizes the donation at 0 and this request just
+        keeps its private copies."""
+        cache = self.prefix
+        toks = self._host_prompt(req)
+        n_full = req.prompt_len // PAGE_SIZE
+        rem = req.prompt_len % PAGE_SIZE
+        n_att = len(req.shared_pages)
+        pool = self.engine.pool if self.engine is not None else None
+        if pool is None or n_att > n_full:
+            return
+        n_new, partial_new = cache.probe_new(toks, n_att)
+        phys: List[int] = []
+        if n_new:
+            phys = pool.cache_donate(req.pages[:n_new])
+            del req.pages[:n_new]
+            req.shared_pages.extend(phys)
+        partial_phys = None
+        if partial_new and rem and n_att + n_new == n_full:
+            got = pool.cow_grant()
+            if got is not None:
+                # after the slice above, the partial tail page is the
+                # request's first remaining private page
+                src = self._phys(req.pages[:1])[0]
+                dst = self._phys(got)[0]
+                self._cow_copy(src, dst)
+                partial_phys = pool.cache_donate(req.pages[:1])[0]
+                req.pages[0] = got[0]
+                cache.stats["cow_copies"] += 1
+        if phys or partial_phys is not None:
+            created = cache.insert(toks, n_att, phys,
+                                   partial_page=partial_phys)
+            req.prefix_nodes = (req.prefix_nodes or []) + created
+
+    def prefix_reattach(self, req: Request) -> bool:
+        """Unpark: re-pin the shared prefix chain a parked request was
+        decoding through.  The pages may have moved (evicted and
+        re-inserted by another tenant) but the token chain is the key,
+        so any surviving chain of ``parked_shared`` full nodes is
+        content-identical.  False = some node was evicted while parked:
+        the caller must requeue the request for a from-scratch recompute."""
+        if req.parked_shared == 0:
+            return True
+        if self.prefix is None:
+            return False
+        m = self.prefix.pin(self._host_prompt(req),
+                            max_full=req.parked_shared)
+        if len(m.phys_pages) < req.parked_shared:
+            self.reattach_unpins += self.prefix.unpin(m.nodes)
+            return False
+        req.prefix_nodes = m.nodes
+        req.shared_pages = list(m.phys_pages)
+        return True
 
     # -- decode --------------------------------------------------------------
     def _decode_fn(self, params, toks, positions, phys_g, phys_l, off,
@@ -548,10 +816,12 @@ class PagedRunner(ModelRunner):
         ring = self.groups.ring_pages if self.use_rings else 1
         pos = np.asarray([r.length for r in running])     # write positions
         for r, p in zip(running, pos):
-            if r.pages and p // PAGE_SIZE >= len(r.pages):
+            if ((r.pages or r.shared_pages)
+                    and p // PAGE_SIZE >= len(r.shared_pages) + len(r.pages)):
                 raise RuntimeError(
                     f"{r.req_id}: token {p} beyond granted pages "
-                    f"({len(r.pages)}) -- engine must grow with horizon=1")
+                    f"({len(r.shared_pages)} shared + {len(r.pages)}) -- "
+                    "engine must grow with horizon=1")
             if (self.use_rings
                     and (p // PAGE_SIZE) % ring >= len(r.local_pages)):
                 raise RuntimeError(
@@ -563,8 +833,13 @@ class PagedRunner(ModelRunner):
         # two so a growing widest-grant re-buckets O(log pool) times.
         # Tables and write slots carry PHYSICAL ids (requests hold
         # view-local ones): the kernel indexes the possibly pod-shared
-        # device arrays, where only physical ids are unique.
-        g_phys = [self._phys(r.pages) for r in running]
+        # device arrays, where only physical ids are unique.  A request
+        # with a cached prefix mixes BOTH id classes in one table: its
+        # read-only shared pages (already physical, cache-owned) lead,
+        # its view-translated private pages follow; decode always writes
+        # past the prefix, so only private pages are ever written.
+        g_phys = [list(r.shared_pages) + self._phys(r.pages)
+                  for r in running]
         l_phys = ([self._phys_local(r.local_pages) for r in running]
                   if self.use_rings else [[] for _ in running])
         maxp_b = _next_pow2(max(max(len(p) for p in g_phys), 1))
@@ -582,7 +857,7 @@ class PagedRunner(ModelRunner):
             positions[i, 0] = p
             offs[i] = p % PAGE_SIZE
             vlen[i] = p + 1
-            if r.pages:
+            if g_phys[i]:
                 phys_g[i] = g_phys[i][p // PAGE_SIZE]
             if self.use_rings:
                 phys_l[i] = l_phys[i][(p // PAGE_SIZE) % ring]
@@ -638,6 +913,14 @@ class PagedRunner(ModelRunner):
         sole = all(getattr(views.get(u), "parked", False)
                    for u in self.store.users if u != own)
         if sole:
+            # cached prefix pages live inside these arrays: flush them
+            # (every pin was dropped when the tenants' requests were
+            # reclaimed) so the index doesn't outlive the content
+            shared = getattr(pool, "shared", None)
+            if shared is not None:
+                shared.flush_prefix_caches(self.store.key)
+            elif self.prefix is not None:
+                self.prefix.flush()
             self.store.drop_arrays()
         state["arrays_dropped"] = sole
         return state
@@ -672,15 +955,27 @@ class PagedRunner(ModelRunner):
 def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,
                  max_batch: int = 4, cache_len: int = 256,
                  pool_pages: int = 128, use_rings: bool = True,
-                 kv_store: Optional[KVArrayStore] = None) -> ModelRunner:
+                 kv_store: Optional[KVArrayStore] = None,
+                 prefix_cache=None, chunk_pages: int = 4) -> ModelRunner:
     """Factory keyed by ``Application.options['backend']``.  ``kv_store``
-    aliases the paged backend onto the pod's shared device arrays."""
+    aliases the paged backend onto the pod's shared device arrays;
+    ``prefix_cache`` attaches the pod's global prefix cache (paged only:
+    the dense backend has no page identity to share, so asking for a
+    cache there is REJECTED rather than silently dropped -- a benchmark
+    must never compare a cached arm against one that quietly never
+    cached)."""
     if backend == "dense":
+        if prefix_cache is not None:
+            raise ValueError(
+                "backend='dense' cannot serve prefix_cache=True: the "
+                "dense KV cache has no shareable page identity; use "
+                "backend='paged' or drop the option")
         return DenseRunner(cfg, seed=seed, max_batch=max_batch,
                            cache_len=cache_len)
     if backend == "paged":
         return PagedRunner(cfg, seed=seed, pool_pages=pool_pages,
                            max_batch=max_batch, use_rings=use_rings,
-                           kv_store=kv_store)
+                           kv_store=kv_store, prefix_cache=prefix_cache,
+                           chunk_pages=chunk_pages)
     raise ValueError(f"unknown serving backend {backend!r} "
                      "(expected 'dense' or 'paged')")

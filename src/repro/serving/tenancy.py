@@ -53,10 +53,14 @@ class SharedPagePool:
         self.history = history
         self.views: Dict[str, "PoolView"] = {}
         self.stats = {"preemptions": {}, "cross_app_preemptions": 0,
-                      "denials": {}}
+                      "denials": {}, "prefix_evictions": 0}
         # physical KV device-array sets, one per KV shape signature: every
         # same-shape paged tenant aliases the same arrays (see kv_store)
         self.kv_stores: Dict[Tuple, object] = {}
+        # global prefix caches, keyed (kv_shape_key, model, seed): tenants
+        # may share cached prefix pages only when they share BOTH the
+        # device arrays and the weights that produced the KV
+        self.prefix_caches: Dict[Tuple, object] = {}
 
     # -- tenancy ------------------------------------------------------------
     def view(self, app: str, *,
@@ -85,11 +89,35 @@ class SharedPagePool:
 
     def _take(self, n: int) -> Optional[List[int]]:
         if n > len(self.free):
+            # pool pressure: evict refcount-0 prefix-cache pages (global
+            # LRU across every cache on this pod) before denying.  Pinned
+            # nodes -- prefixes some in-flight request decodes through --
+            # are never victims; live requests always outrank cold cache.
+            self._evict_prefix(n - len(self.free))
+        if n > len(self.free):
             return None
         return [self.free.pop() for _ in range(n)]
 
     def _give(self, pages: List[int]) -> None:
         self.free.extend(pages)
+
+    def _evict_prefix(self, need: int) -> int:
+        """Evict up to ``need`` refcount-0 cached pages, oldest first
+        across all of the pod's prefix caches; freed pages land back on
+        ``self.free`` via each cache's free_fn (:meth:`_give`)."""
+        freed = 0
+        while freed < need:
+            best = None
+            for c in self.prefix_caches.values():
+                n = c.peek_evictable()
+                if n is not None and (best is None
+                                      or n.last_used < best[1].last_used):
+                    best = (c, n)
+            if best is None:
+                break
+            freed += len(best[0].evict(best[1]))
+        self.stats["prefix_evictions"] += freed
+        return freed
 
     # -- physical KV device arrays (same-shape tenant aliasing) --------------
     def kv_store(self, key: Tuple, factory: Callable[[], object]) -> object:
@@ -104,6 +132,34 @@ class SharedPagePool:
             st = factory()
             self.kv_stores[key] = st
         return st
+
+    # -- global prefix caches (serving/prefix_cache.py) ----------------------
+    def prefix_cache(self, key: Tuple, factory: Callable[[], object]):
+        """The pod's single prefix cache for ``key`` -- ``(kv_shape_key,
+        model_name, seed)``: cached KV is a function of the weights, not
+        just the array shapes, so only true model twins may share.
+        Created on first use; survives app churn (a future same-key
+        tenant re-warms instantly) but is flushed with its KV store."""
+        c = self.prefix_caches.get(key)
+        if c is None:
+            c = factory()
+            self.prefix_caches[key] = c
+        return c
+
+    def flush_prefix_caches(self, kv_key: Tuple) -> int:
+        """Evict every unpinned node of the caches bound to KV store
+        ``kv_key`` -- called when the store's device arrays go away
+        (last tenant closed, or all tenants parked): the cached pages'
+        contents die with the arrays, so the index must not outlive
+        them.  Returns pages freed."""
+        freed = 0
+        for key in [k for k in self.prefix_caches
+                    if k and k[0] == kv_key]:
+            cache = self.prefix_caches[key]
+            freed += cache.flush()
+            if cache.num_pages == 0:
+                self.prefix_caches.pop(key, None)
+        return freed
 
     def kv_device_bytes(self) -> int:
         """Live device bytes of every registered KV array store (the pod's
@@ -328,6 +384,17 @@ class PoolView(PagePool):
         self._free_ids.extend(pages)
         self.shared._give(phys)
 
+    def cache_donate(self, pages: Sequence[int]) -> List[int]:
+        """Donate freshly prefilled prompt pages to the prefix cache:
+        uncharge this view's quota and forget the remap (the request
+        will reference the pages by PHYSICAL id via ``shared_pages``),
+        but do NOT return them to the shared free list -- the cache owns
+        them now, and pod-level used_pages keeps reporting them."""
+        self.used -= len(pages)
+        phys = [self._remap.pop(v) for v in pages]
+        self._free_ids.extend(pages)
+        return phys
+
     def _alloc_local(self, n: int) -> Optional[List[int]]:
         """Ring pages index the local-attention layers' arrays -- the
         aliased store's shared ones, else the app's private set -- and
@@ -384,12 +451,17 @@ class PoolView(PagePool):
             st = self.kv_store
             st.users.discard(self.app)
             if not st.users:
+                # cached prefix pages live inside the store's arrays --
+                # flush them back to the shared free list before the
+                # arrays (and their content) go away
+                self.shared.flush_prefix_caches(st.key)
                 self.shared.kv_stores.pop(st.key, None)
             elif all(getattr(self.shared.views.get(u), "parked", False)
                      for u in st.users):
                 # every remaining tenant is parked (KV on host): the
                 # store stays registered for their unpark to revive, but
                 # its device HBM must not sit idle meanwhile
+                self.shared.flush_prefix_caches(st.key)
                 st.drop_arrays()
             self.kv_store = None
         self.shared.views.pop(self.app, None)

@@ -1,0 +1,378 @@
+"""Global prefix cache: radix-trie lookup, refcounted copy-on-write
+pages, suffix-only chunked prefill.
+
+Two layers:
+
+* pure trie (no jax): the PR's edge-case checklist -- empty prompt,
+  sub-page prompt, divergence exactly at a full-page boundary (plain
+  miss, no COW), two requests racing to insert the same prefix in one
+  tick (second adopts nothing), refcount-0 LRU eviction that never takes
+  pinned pages, and a hypothesis property (lookup of any probe against
+  an inserted prompt only ever matches a true common prefix);
+* jax integration: warm-vs-cold-vs-dense token exactness, chunked
+  prefill parity on long prompts without a cache, the dense backend
+  rejecting ``prefix_cache=True`` loudly, pod accounting (cache pages
+  out of view quota but inside pod used_pages), eviction under co-tenant
+  pressure with mid-decode pins held, and park/unpark re-attach
+  (surviving prefix nodes re-pinned; evicted ones -> requeue-recompute,
+  tokens identical either way).
+"""
+
+import pytest
+
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, JaxExecutor
+from repro.serving.kv_cache import PAGE_SIZE, Request
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.tenancy import SharedPagePool
+
+
+def _cache(freed=None):
+    freed = freed if freed is not None else []
+    return PrefixCache(("test",), freed.extend), freed
+
+
+def _toks(n, seed=0):
+    return tuple((seed * 7919 + i * 31) % 211 for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# pure trie
+# ---------------------------------------------------------------------------
+
+def test_empty_prompt_is_a_miss_and_inserts_nothing():
+    cache, _ = _cache()
+    m = cache.pin(())
+    assert not m.hit and m.cached_len == 0 and m.nodes == []
+    assert cache.unpin(m.nodes) == 0
+    assert cache.probe_new((), 0) == (0, False)
+    assert cache.num_pages == 0
+
+
+def test_prompt_shorter_than_one_page_round_trips_as_partial():
+    cache, _ = _cache()
+    toks = _toks(PAGE_SIZE // 2)
+    assert cache.pin(toks).cached_len == 0
+    n_new, partial_new = cache.probe_new(toks, 0)
+    assert (n_new, partial_new) == (0, True)
+    created = cache.insert(toks, 0, [], partial_page=7)
+    assert len(created) == 1 and not created[0].full
+    m = cache.pin(toks)
+    # sub-page content is a COW source, never a table-ready full page
+    assert m.cached_len == len(toks) and m.phys_pages == []
+    assert m.cow_src == 7
+    cache.unpin(created + m.nodes)
+
+
+def test_divergence_at_exact_page_boundary_is_a_plain_miss():
+    cache, _ = _cache()
+    base = _toks(2 * PAGE_SIZE)
+    donor = cache.insert(base, 0, [10, 11])
+    # agrees on page 0, diverges at EXACTLY the page-1 boundary: one full
+    # page matches, and there is no COW source (no partial content)
+    probe = base[:PAGE_SIZE] + _toks(PAGE_SIZE, seed=99)
+    m = cache.pin(probe)
+    assert m.cached_len == PAGE_SIZE
+    assert m.phys_pages == [10]
+    assert m.cow_src is None
+    cache.unpin(donor + m.nodes)
+
+
+def test_divergence_inside_partial_page_yields_cow_lead():
+    cache, _ = _cache()
+    base = _toks(PAGE_SIZE + 40)
+    donor = cache.insert(base, 0, [3], partial_page=4)
+    probe = base[:PAGE_SIZE + 25] + _toks(60, seed=5)
+    m = cache.pin(probe)
+    assert m.phys_pages == [3]
+    assert m.cached_len == PAGE_SIZE + 25     # lead slots via COW
+    assert m.cow_src == 4
+    cache.unpin(donor + m.nodes)
+
+
+def test_racing_inserts_second_adopts_nothing():
+    """Two requests with the SAME prompt admitted in one tick: both miss
+    at pin time; the first insert wins, the second probe sees the trie
+    moved past its attach depth and adopts zero pages (its donation
+    would not extend its own matched prefix contiguously)."""
+    cache, _ = _cache()
+    toks = _toks(2 * PAGE_SIZE + 30)
+    m0, m1 = cache.pin(toks), cache.pin(toks)
+    assert not m0.hit and not m1.hit
+    assert cache.probe_new(toks, 0) == (2, True)
+    created = cache.insert(toks, 0, [20, 21], partial_page=22)
+    assert cache.probe_new(toks, 0) == (0, False), "raced insert adopts 0"
+    # and a third request pinning NOW simply hits the winner's pages
+    m2 = cache.pin(toks)
+    assert m2.phys_pages == [20, 21] and m2.cached_len == len(toks)
+    cache.unpin(created + m2.nodes)
+
+
+def test_eviction_is_refcount0_lru_and_never_takes_pins():
+    cache, freed = _cache()
+    a = cache.insert(_toks(PAGE_SIZE), 0, [1])
+    b = cache.insert(_toks(PAGE_SIZE, seed=2), 0, [2])
+    assert cache.peek_evictable() is None, "pinned nodes are not candidates"
+    assert cache.evict_lru(need=4) == 0 and freed == []
+    cache.unpin(a)                       # a older than b, both now refs=0
+    cache.unpin(b)
+    assert cache.evict_lru(need=1) == 1
+    assert freed == [1], "LRU order: the older unpinned node goes first"
+    assert cache.evict_lru(need=8) == 1 and freed == [1, 2]
+    assert cache.num_pages == 0
+
+
+def test_interior_nodes_survive_until_leaves_go():
+    cache, freed = _cache()
+    chain = cache.insert(_toks(2 * PAGE_SIZE + 10), 0, [5, 6],
+                         partial_page=7)
+    cache.unpin(chain)
+    # leaf-first: partial 7, then page-1 node 6, then the root child 5
+    cache.evict_lru(need=3)
+    assert freed == [7, 6, 5]
+
+
+def test_flush_leaves_pinned_nodes_alone():
+    cache, freed = _cache()
+    keep = cache.insert(_toks(PAGE_SIZE), 0, [1])
+    drop = cache.insert(_toks(PAGE_SIZE, seed=3), 0, [2])
+    cache.unpin(drop)
+    assert cache.flush() == 1 and freed == [2]
+    assert cache.num_pages == 1
+    cache.unpin(keep)
+    assert cache.flush() == 1 and freed == [2, 1]
+
+
+def test_lookup_of_inserted_prompt_matches_a_true_prefix():
+    """Hypothesis property: after inserting prompt ``p``, pinning any
+    probe ``q`` yields cached tokens that are a common prefix of BOTH --
+    the cache may only ever hand back KV for tokens the request actually
+    has."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.given(
+        p=st.lists(st.integers(0, 7), max_size=3 * PAGE_SIZE + 9),
+        q=st.lists(st.integers(0, 7), max_size=3 * PAGE_SIZE + 9))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def prop(p, q):
+        cache, _ = _cache()
+        n_full, rem = len(p) // PAGE_SIZE, len(p) % PAGE_SIZE
+        created = cache.insert(p, 0, list(range(n_full)),
+                               partial_page=n_full if rem else None)
+        m = cache.pin(q)
+        assert m.cached_len <= len(q)
+        assert tuple(q[:m.cached_len]) == tuple(p[:m.cached_len])
+        # full coverage when the probe IS the prompt
+        m2 = cache.pin(p)
+        assert m2.cached_len == len(p)
+        cache.unpin(created + m.nodes + m2.nodes)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# jax integration (reduced model through the runtime)
+# ---------------------------------------------------------------------------
+
+def _overlap_requests(n, *, shared_len=2 * PAGE_SIZE + 25, suffix_len=70,
+                      gen=6):
+    shared = _toks(shared_len, seed=1)
+    reqs = []
+    for i in range(n):
+        toks = shared + _toks(suffix_len, seed=100 + i)
+        reqs.append(Request(f"px{i}", len(toks), gen, prompt_tokens=toks))
+    return reqs
+
+
+def _mk_handle(cluster, name, *, backend="paged", prefix=False, **opts):
+    return cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name=name, max_batch=2,
+        backend=backend, policy="fixed", cache_len=1024,
+        prefix_cache=prefix, **opts))
+
+
+def _serve_seq(h, reqs):
+    """One request at a time (deterministic hit pattern: no insert race)."""
+    out = []
+    for r in reqs:
+        h.submit_request(r)
+        while h.step()["alive"]:
+            pass
+        out.append(tuple(r.output_tokens))
+    return out
+
+
+def test_warm_cold_dense_token_exactness():
+    """The tentpole acceptance: cached (warm), uncached paged (cold) and
+    dense prefill produce IDENTICAL tokens for >=50%-overlap prompts --
+    reusing cached prefix KV and copy-on-write partial pages changes
+    which pages prefill computes, never the tokens."""
+    outs, stats = {}, {}
+    for arm, (backend, prefix) in (("warm", ("paged", True)),
+                                   ("cold", ("paged", False)),
+                                   ("dense", ("dense", False))):
+        cluster = Cluster(pods=1, history=HistoryStore(),
+                          executor=JaxExecutor(seed=0), pool_pages=64)
+        h = _mk_handle(cluster, f"parity-{arm}", backend=backend,
+                       prefix=prefix)
+        outs[arm] = _serve_seq(h, _overlap_requests(3))
+        stats[arm] = h.serving_stats()
+        h.release()
+    assert outs["warm"] == outs["cold"] == outs["dense"]
+    s = stats["warm"]
+    assert s["prefix_hit_rate"] == pytest.approx(2 / 3)
+    assert s["cow_copies"] > 0, "mid-page overlap must exercise COW"
+    assert s["shared_pages"] > 0
+    # suffix-only prefill actually skipped the cached pages
+    assert (s["prefill_pages_computed"]
+            < stats["cold"]["prefill_pages_computed"])
+
+
+def test_chunked_prefill_matches_dense_on_long_prompts():
+    """PR 4 follow-up: prompts longer than one chunk run fixed-size
+    chunked prefill even with no cache -- token parity with dense and a
+    bounded trace count (chunks reuse one compiled shape per bucket)."""
+    longreqs = lambda: [Request(f"lg{i}", 5 * PAGE_SIZE + 17, 5,
+                                prompt_tokens=_toks(5 * PAGE_SIZE + 17,
+                                                    seed=40 + i))
+                        for i in range(2)]
+    outs = {}
+    for backend in ("paged", "dense"):
+        cluster = Cluster(pods=1, history=HistoryStore(),
+                          executor=JaxExecutor(seed=0), pool_pages=64)
+        h = _mk_handle(cluster, f"chunk-{backend}", backend=backend)
+        outs[backend] = _serve_seq(h, longreqs())
+        if backend == "paged":
+            assert h.runner.prefill_traces <= 3, \
+                "chunked prefill must bucket, not retrace per prompt"
+        h.release()
+    assert outs["paged"] == outs["dense"]
+
+
+def test_dense_backend_rejects_prefix_cache():
+    """Dense KV has no page identity to share: asking for the prefix
+    cache must fail loudly, not silently serve uncached -- and the
+    failed bind must not leak its pool view on the pod."""
+    from repro.configs import get_config
+    from repro.configs.reduced import reduced_config
+    from repro.serving.model_runner import build_runner
+
+    with pytest.raises(ValueError, match="no shareable page identity"):
+        build_runner("dense", reduced_config(get_config("tinyllama-1.1b")),
+                     prefix_cache=PrefixCache(("x",), lambda pages: None))
+
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=32)
+    with pytest.raises(ValueError, match="no shareable page identity"):
+        _mk_handle(cluster, "dense-reject", backend="dense", prefix=True)
+    assert not cluster.pod_pool("pod0").views, \
+        "failed bind leaked its pool view"
+
+
+def test_cache_pages_out_of_quota_but_in_pod_accounting():
+    """Donated pages leave the view's quota charge (suffix-only admits
+    cheaper) but stay in pod used_pages/utilization -- they are not
+    free, they are cache-owned."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=64)
+    h = _mk_handle(cluster, "quota", prefix=True)
+    _serve_seq(h, _overlap_requests(2))
+    pool = h.engine.pool
+    shared = pool.shared
+    cache = h.runner.prefix
+    assert cache.num_pages > 0
+    assert pool.used == 0, "completed requests must release private pages"
+    assert shared.used_pages == cache.num_pages, \
+        "cache-owned pages stay charged at pod level"
+    util_with_cache = shared.utilization
+    assert util_with_cache > 0
+    h.release()
+    assert shared.used_pages == 0, \
+        "last user's release flushes the cache with its arrays"
+
+
+def test_eviction_under_cotenant_pressure_holds_pins():
+    """A co-tenant draining the pod free list forces refcount-0 LRU
+    eviction of cache pages -- but never of a chain the cached tenant is
+    decoding through, so its tokens stay exact under pressure."""
+    def run(pressure):
+        # 14 pages: the greedy tenant's two CONCURRENT 6-page requests
+        # overshoot the free list left by the pinned cache chain + the
+        # mid-decode request (forcing refcount-0 eviction), while any
+        # single request still fits once a peer completes (no livelock)
+        cluster = Cluster(pods=1, history=HistoryStore(),
+                          executor=JaxExecutor(seed=0), pool_pages=14)
+        a = _mk_handle(cluster, "cached-a", prefix=True)
+        outs = _serve_seq(a, _overlap_requests(2, gen=4))
+        evicted = 0
+        if pressure:
+            shared = cluster.pod_pool("pod0")
+            assert shared.used_pages > 0      # idle cache pages held
+            b = _mk_handle(cluster, "greedy-b", quota_pages=14)
+            # interleave: a decodes through pinned prefix pages while
+            # b's grants squeeze the free list
+            ra = _overlap_requests(1, gen=8)[0]
+            ra.req_id = "under-pressure"
+            a.submit_request(ra)
+            a.step()                          # pin + prefill, mid-decode
+            for big in [Request(f"big{i}", 5 * PAGE_SIZE, 4)
+                        for i in range(3)]:
+                b.submit_request(big)         # batched: demand > free
+            while b.step()["alive"]:
+                pass
+            while a.step()["alive"]:
+                pass
+            outs.append(tuple(ra.output_tokens))
+            evicted = shared.stats["prefix_evictions"]
+            b.release()
+        else:
+            ra = _overlap_requests(1, gen=8)[0]
+            ra.req_id = "under-pressure"
+            outs.extend(_serve_seq(a, [ra]))
+        a.release()
+        return outs, evicted
+
+    calm, _ = run(False)
+    pressured, evicted = run(True)
+    assert evicted > 0, "co-tenant demand must reclaim idle cache pages"
+    assert pressured == calm, "pinned prefix pages must hold mid-decode"
+
+
+def test_park_unpark_reattaches_or_recomputes():
+    """Parking snapshots only private pages; unpark re-pins the same
+    prefix chain when it survived, and falls back to requeue-recompute
+    when the cache was flushed meanwhile -- token-identical either way."""
+    def run(disturb):
+        cluster = Cluster(pods=1, history=HistoryStore(),
+                          executor=JaxExecutor(seed=0), pool_pages=64)
+        h = _mk_handle(cluster, "parker", prefix=True)
+        # a live same-model co-tenant keeps the pod's KV arrays (and with
+        # them the cache content) alive across the park; a SOLE tenant's
+        # park flushes the cache with the arrays, so reattach is only
+        # reachable in co-tenancy
+        keeper = _mk_handle(cluster, "keeper", prefix=True)
+        warm = _overlap_requests(2, gen=4)
+        out = _serve_seq(h, warm[:1])
+        r = warm[1]
+        h.submit_request(r)
+        h.step()                              # hit + prefill, mid-decode
+        assert r.shared_pages, "second overlapping request must hit"
+        h.park()
+        if disturb == "flush":
+            cache = h.runner.prefix
+            assert cache.flush() > 0, "parked pins must be dropped"
+        receipt = h.unpark()
+        if disturb == "flush":
+            assert receipt["requeued_requests"] == 1
+        else:
+            assert receipt["restored_requests"] == 1
+            assert h.runner.reattach_unpins == 0
+        while h.step()["alive"]:
+            pass
+        out.append(tuple(r.output_tokens))
+        h.release()
+        keeper.release()
+        return out
+
+    assert run(None) == run("flush")

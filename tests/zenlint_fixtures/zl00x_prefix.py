@@ -1,0 +1,99 @@
+"""Prefix-cache fixtures: the ZL001 + ZL005 extensions of PR 7.
+
+Never imported at runtime -- parsed by the analyzer only.  The prefix
+cache introduces a second class of physical page ids that legitimately
+lives on requests (``req.shared_pages``, fed by ``cache_donate`` /
+``PrefixMatch.phys_pages``) and three new accounting receipts
+(``pin``/``unpin``/``cow_grant``).  Lines that MUST be flagged carry an
+``# EXPECT[...]`` marker; every other line must stay clean, so the
+correct idioms below double as negative cases.
+"""
+
+
+# -- ZL001 violations: the new physical provenance sources ------------------
+
+def view_ids_assigned_to_shared_pages(req):
+    req.shared_pages = req.pages  # EXPECT[ZL001]
+
+
+def view_ids_extended_into_shared_pages(pool, req):
+    req.shared_pages.extend(pool.cow_grant())  # EXPECT[ZL001]
+
+
+def shared_pages_translated_again(view, req):
+    return view.to_physical(req.shared_pages)  # EXPECT[ZL001]
+
+
+def match_pages_stored_as_view_ids(m, req):
+    ids = list(m.phys_pages)
+    req.pages.extend(ids)  # EXPECT[ZL001]
+
+
+def donated_ids_freed_as_view_ids(self, pool, req):
+    phys = pool.cache_donate(req.pages)
+    return self._phys(phys)  # EXPECT[ZL001]
+
+
+# -- ZL001 correct idioms (must NOT be flagged) -----------------------------
+
+def correct_donation(pool, req):
+    phys = pool.cache_donate(req.pages)
+    req.shared_pages.extend(phys)
+
+
+def correct_mixed_page_table(view, req):
+    table = list(req.shared_pages) + view.to_physical(req.pages)
+    return page_table(pages=table)
+
+
+def correct_shared_free(pool, req):
+    pool._give(req.shared_pages)
+
+
+# -- ZL005 violations: pin/unpin/cow_grant receipts -------------------------
+
+def pin_discarded(cache, toks):
+    cache.pin(toks)  # EXPECT[ZL005]
+
+
+def pin_bound_but_never_used(cache, toks):
+    m = cache.pin(toks)  # EXPECT[ZL005]
+
+
+def unpin_count_discarded(cache, req):
+    cache.unpin(req.prefix_nodes)  # EXPECT[ZL005]
+
+
+def cow_grant_dropped(pool):
+    got = pool.cow_grant()  # EXPECT[ZL005]
+
+
+def early_return_strands_pin(cache, toks, fast):
+    m = cache.pin(toks)
+    if fast:
+        return None  # EXPECT[ZL005]
+    return m
+
+
+# -- ZL005 correct idioms (must NOT be flagged) -----------------------------
+
+def correct_pin_attach(cache, toks, req):
+    m = cache.pin(toks)
+    req.prefix_nodes = m.nodes
+    req.shared_pages = list(m.phys_pages)
+
+
+def correct_unpin_into_stats(cache, stats, req):
+    released = cache.unpin(req.prefix_nodes)
+    stats["prefix_unpinned"] += released
+
+
+def correct_unpin_augassign(self, cache, m):
+    self.reattach_unpins += cache.unpin(m.nodes)
+
+
+def correct_cow_grant_checked(pool):
+    got = pool.cow_grant()
+    if got is None:
+        return None
+    return got[0]
