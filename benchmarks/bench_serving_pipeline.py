@@ -36,10 +36,22 @@ reference).  Metrics: prefill pages actually computed (the savings
 headline), prefix hit rate, COW copies, cache-owned shared pages, and
 mean TTFT.  Emitted as ``BENCH_serving_prefix.json``.
 
+Part 6 (fig_obs): observability overhead -- the fig11 null-engine
+workload run with the ``repro.obs`` tracer + metrics OFF vs ON
+(interleaved off/on pairs, min-over-pairs).  The headline metric is
+``overhead_frac`` = min over pairs of (wall_on - wall_off) / wall_off,
+gated < a few percent, plus
+``lifecycle_ok`` -- the captured trace must reconstruct the exact
+request lifecycle (admit/finish/decode-step event counts == the
+engine's own counters).  The ON arm also exports its Chrome trace next
+to the JSON artifacts so CI uploads a loadable smoke trace.  Emitted as
+``BENCH_serving_obs.json``.
+
 Derived: completion wall time, pool utilization, denial/preempt counts.
 """
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -55,6 +67,7 @@ if __name__ == "__main__":
     # happen while it can still take effect (never when imported as a
     # module -- re-execing the host pytest/run.py would be hostile)
     apply_host_settings(reexec=True)
+from repro import obs
 from repro.core.history import HistoryStore
 from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
 from repro.serving.engine import ServingEngine
@@ -86,6 +99,48 @@ def run_policy(policy: str, prompt: int, gen: int, n: int = 64):
             break
     wall = (time.perf_counter() - t0) * 1e6
     return wall, eng.stats, peak_util, pool
+
+
+def run_obs(*, n: int = 48, repeats: int = 3):
+    """The fig11 720p null-engine workload with the obs plane off vs on.
+
+    The arms are INTERLEAVED (off, on, off, on, ...) and the overhead is
+    the minimum over back-to-back pairs: host scheduling jitter (and a
+    co-running build on a CI runner) inflates whole stretches of wall
+    clock, so a same-pair ratio from the quietest moment is the honest
+    floor of what the guard-and-append adds -- min-of-all-off vs
+    min-of-all-on would compare samples taken under different load.  The
+    ON arm verifies lifecycle reconstruction against the engine's own
+    counters and returns the last tracer for export."""
+    prompt, gen = CLASSES["720p"]
+
+    def one(tracing):
+        tracer = obs.enable() if tracing else None
+        if tracing:
+            obs.enable_metrics()
+        wall, stats, _, _ = run_policy("history", prompt, gen, n=n)
+        if tracing:
+            lifecycle_ok = int(
+                len(tracer.by_name("admit", "request")) == stats.admitted
+                and len(tracer.by_name("finish", "request")) == stats.completed
+                and len(tracer.by_name("decode_step", "engine"))
+                == stats.decode_steps
+                and len(tracer.by_name("submit", "request")) == n)
+            cap = (tracer, stats, lifecycle_ok)
+            obs.disable()
+            obs.disable_metrics()
+            return wall, stats, cap
+        assert obs.trace.TRACER is None      # the OFF arm must be off
+        return wall, stats, None
+
+    pairs, cap = [], None
+    for _ in range(repeats):
+        w_off, stats_off, _ = one(False)
+        w_on, stats_on, cap = one(True)
+        pairs.append((w_off, w_on))
+    overhead = min((on - off) / off for off, on in pairs)
+    return (min(p[0] for p in pairs), min(p[1] for p in pairs),
+            max(overhead, 0.0), stats_off, stats_on, cap)
 
 
 def run_tenancy(shared: bool, n_per_app: int = 32, pool_pages: int = 192,
@@ -368,6 +423,36 @@ def main() -> None:
         f"ttft_speedup={ttft['nocache'] / max(ttft['cached'], 1e-9):.2f}")
     emit_json("serving_prefix",
               extra={"smoke": args.smoke, "n": n_px, "overlap": overlap},
+              rows_from=mark)
+
+    # Part 6: observability overhead -- tracer+metrics off vs on over the
+    # same null-engine workload, interleaved pairs (BENCH_serving_obs.json)
+    mark = rows_mark()
+    n_obs = 24 if args.smoke else 96
+    rep = 5 if args.smoke else 3
+    run_obs(n=n_obs, repeats=1)          # warm-up (first-touch costs)
+    w_off, w_on, overhead, stats_off, stats_on, cap = run_obs(
+        n=n_obs, repeats=rep)
+    tracer, _, lifecycle_ok = cap
+    row("fig_obs/off", w_off,
+        f"completed={stats_off.completed};"
+        f"decode_steps={stats_off.decode_steps}")
+    row("fig_obs/on", w_on,
+        f"completed={stats_on.completed};"
+        f"decode_steps={stats_on.decode_steps};"
+        f"events={len(tracer)};dropped={tracer.dropped};"
+        f"lifecycle_ok={lifecycle_ok}")
+    row("fig_obs/overhead", 0.0,
+        f"overhead_frac={overhead:.4f};"
+        f"lifecycle_ok={lifecycle_ok};events={len(tracer)}")
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", "artifacts/bench")
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(out_dir, "TRACE_serving_obs.json")
+    obs.write_chrome_trace(cap[0], trace_path,
+                           extra_meta={"bench": "fig_obs", "n": n_obs})
+    print(f"[artifact] {trace_path}", flush=True)
+    emit_json("serving_obs",
+              extra={"smoke": args.smoke, "n": n_obs, "repeats": rep},
               rows_from=mark)
 
 

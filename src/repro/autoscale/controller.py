@@ -39,6 +39,7 @@ from typing import Dict, List, Optional
 from repro.autoscale.metrics import MetricsWindow
 from repro.autoscale.policy import (AppPolicy, Decision, QuotaRebalancer,
                                     default_policies)
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -141,7 +142,19 @@ class AutoscaleController:
         rec.streak = {decision.action: streak}
         if streak < self.confirm_ticks:
             return None
-        return self._apply(rec, decision, now)
+        act = self._apply(rec, decision, now)
+        if act is not None:
+            t = obs_trace.TRACER
+            if t is not None:
+                # the decision WITH its explanation: the rule that fired
+                # and the windowed rates it saw this tick
+                args = {"action": decision.action,
+                        "reason": decision.reason}
+                for k, v in rec.window.rates.items():
+                    args["rate_" + k] = v
+                t.instant("autoscale", "decision", rec.handle.app.name,
+                          args)
+        return act
 
     def _apply(self, rec: AppRecord, d: Decision, now: float
                ) -> Optional[Dict]:
@@ -186,6 +199,10 @@ class AutoscaleController:
             if quotas:
                 out.append({"action": "rebalance_quotas", "pod": pod,
                             "quotas": quotas})
+                t = obs_trace.TRACER
+                if t is not None:
+                    t.instant("autoscale", "rebalance", pod,
+                              {"quotas": dict(quotas)})
         return out
 
     # -- introspection -------------------------------------------------------

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+from repro.obs.metrics import hist_delta
 from repro.serving.engine import EngineStats
 
 #: monotonic counters at the top level of a serving_stats() dict
@@ -36,30 +37,48 @@ def stats_delta(cur: Dict, since: Dict) -> Dict:
     """Windowed view of a ``serving_stats()`` dict: counters accumulated
     since the ``since`` snapshot, gauges (utilization, queue depth, pool
     sizes) taken from ``cur``.  Window means (``mean_ttft_s``,
-    ``mean_decode_step_s``) are recomputed from the deltas."""
+    ``mean_decode_step_s``) are recomputed from the deltas.
+
+    Counter resets clamp to zero: a fresh engine re-registered under an
+    old app name restarts every counter at 0, and a window must report
+    "no progress observed" rather than a huge negative rate.  The
+    optional ``hist`` sub-dict (repro.obs latency histograms) windows
+    per-bucket with the same reset semantics (see
+    :func:`repro.obs.metrics.hist_delta`)."""
     out = dict(cur)
     for k in ENGINE_COUNTERS:
         if k in out:
-            out[k] = out[k] - since.get(k, 0)
+            out[k] = max(out[k] - since.get(k, 0), 0)
     out["mean_ttft_s"] = out.get("ttft_s_sum", 0.0) / max(
         out.get("ttft_count", 0), 1)
     out["mean_decode_step_s"] = out.get("decode_s_sum", 0.0) / max(
         out.get("decode_steps", 0), 1)
     if isinstance(cur.get("pool"), dict):
         spool = since.get("pool", {})
-        out["pool"] = {k: v - spool.get(k, 0) if k in POOL_COUNTERS else v
+        if not isinstance(spool, dict):
+            spool = {}
+        out["pool"] = {k: max(v - spool.get(k, 0), 0)
+                       if k in POOL_COUNTERS else v
                        for k, v in cur["pool"].items()}
     if isinstance(cur.get("shared_pool"), dict):
         sp = dict(cur["shared_pool"])
         ss = since.get("shared_pool", {})
-        sp["cross_app_preemptions"] = (
+        if not isinstance(ss, dict):
+            ss = {}
+        sp["cross_app_preemptions"] = max(
             sp.get("cross_app_preemptions", 0)
-            - ss.get("cross_app_preemptions", 0))
+            - ss.get("cross_app_preemptions", 0), 0)
         for key in ("denials_by_app", "preemptions_by_app"):
             prev = ss.get(key, {})
-            sp[key] = {a: n - prev.get(a, 0)
+            sp[key] = {a: max(n - prev.get(a, 0), 0)
                        for a, n in sp.get(key, {}).items()}
         out["shared_pool"] = sp
+    if isinstance(cur.get("hist"), dict):
+        shist = since.get("hist", {})
+        if not isinstance(shist, dict):
+            shist = {}
+        out["hist"] = {name: hist_delta(h, shist.get(name))
+                       for name, h in cur["hist"].items()}
     return out
 
 

@@ -37,6 +37,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import Request
 
 
@@ -90,10 +91,17 @@ def park_app(handle) -> Dict:
                   for req, (g, l) in drained],
         runner_state=runner_state, freed_bytes=freed_bytes,
         freed_pages=freed_pages, parked_at=time.monotonic())
-    return {"freed_bytes": freed_bytes, "freed_pages": freed_pages,
-            "drained_requests": len(drained),
-            "kv_arrays_dropped": bool((runner_state or {}).get(
-                "arrays_dropped", runner_state is not None))}
+    receipt = {"freed_bytes": freed_bytes, "freed_pages": freed_pages,
+               "drained_requests": len(drained),
+               "kv_arrays_dropped": bool((runner_state or {}).get(
+                   "arrays_dropped", runner_state is not None))}
+    t = obs_trace.TRACER
+    if t is not None:
+        t.instant("autoscale", "park", handle.app.name, dict(receipt))
+        for req, _ in drained:
+            t.instant("request", "park", req.req_id,
+                      {"app": handle.app.name})
+    return receipt
 
 
 def unpark_app(handle) -> Dict:
@@ -147,7 +155,17 @@ def unpark_app(handle) -> Dict:
         eng.queue.appendleft(pr.req)
         eng.stats.preempted += 1
     del handle.exec_state["parked"]
-    return {"restored_requests": len(restored),
-            "requeued_requests": len(requeued),
-            "reacquired_bytes": parked.freed_bytes,
-            "parked_s": time.monotonic() - parked.parked_at}
+    receipt = {"restored_requests": len(restored),
+               "requeued_requests": len(requeued),
+               "reacquired_bytes": parked.freed_bytes,
+               "parked_s": time.monotonic() - parked.parked_at}
+    t = obs_trace.TRACER
+    if t is not None:
+        t.instant("autoscale", "unpark", handle.app.name, dict(receipt))
+        for pr in restored:
+            t.instant("request", "unpark", pr.req.req_id,
+                      {"app": handle.app.name, "restored": True})
+        for pr in requeued:
+            t.instant("request", "unpark", pr.req.req_id,
+                      {"app": handle.app.name, "restored": False})
+    return receipt

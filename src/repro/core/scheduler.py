@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.graph import ResourceGraph
 from repro.core.history import HistoryStore
 from repro.core.materializer import Plan
+from repro.obs import trace as obs_trace
 
 GB = 1 << 30
 
@@ -157,12 +158,22 @@ class GlobalScheduler:
                      if ps.pod.available >= job.demand_bytes]
         if not cands:
             self.pending.append(job)
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("scheduler", "job_pending", job.job_id,
+                          {"app": job.app,
+                           "demand_bytes": job.demand_bytes})
             return None
         _, name = min(cands)
         ok = self.pods[name].admit(job)
         if not ok:  # raced; retry queue
             self.pending.append(job)
             return None
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("scheduler", "job_admit", job.job_id,
+                      {"app": job.app, "pod": name,
+                       "demand_bytes": job.demand_bytes})
         # pre-mark estimated future demand (low-priority reservation)
         if self.history is not None:
             est_peak = self.history.peak(job.app, "job", "bytes",
@@ -208,13 +219,23 @@ class GlobalScheduler:
             pod, mark = self.reservations.get(job.job_id, (job.pod, 0))
             self.pods[pod].pod.reserved_bytes += freed
             self.reservations[job.job_id] = (pod, mark + freed)
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("scheduler", "job_park", job.job_id,
+                          {"app": job.app, "freed_bytes": freed})
             self._drain_pending()
         return freed
 
     def unpark(self, job: Job, reacquire_bytes: int) -> bool:
         """Reacquire a parked job's bytes (consumes the park reservation).
         False when co-tenants took the space in the meantime."""
-        return self.scale_up(job, reacquire_bytes)
+        ok = self.scale_up(job, reacquire_bytes)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("scheduler", "job_unpark", job.job_id,
+                      {"app": job.app, "ok": ok,
+                       "reacquire_bytes": reacquire_bytes})
+        return ok
 
     def cancel(self, job: Job) -> bool:
         """Drop a still-pending job from the queue."""
@@ -237,6 +258,10 @@ class GlobalScheduler:
         self._release_reservation(job)
         job.state = "done"
         self.completed.append(job)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("scheduler", "job_finish", job.job_id,
+                      {"app": job.app})
         if self.history is not None:
             # record the high-water working footprint, not the residual
             # demand: a parked (or scaled-down) job finishing with ~0

@@ -12,6 +12,7 @@ import argparse
 
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core import profiles as prof
 from repro.core.history import HistoryStore
@@ -54,6 +55,14 @@ def main():
                     help="drive the repro.autoscale control plane: two "
                          "bursts with an idle gap; the app is parked "
                          "between them and transparently unparked")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the full request-lifecycle trace and "
+                         "write it here: .jsonl -> one event per line, "
+                         "anything else -> Chrome/Perfetto trace JSON "
+                         "(summarize with `python -m repro.obs PATH`)")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="record latency histograms and print the "
+                         "Prometheus text exposition at the end")
     args = ap.parse_args()
     if args.backend != "dense" and not args.reduced:
         ap.error("--backend needs --reduced: the default arm serves through "
@@ -61,6 +70,10 @@ def main():
     if args.prefix_cache and args.backend != "paged":
         ap.error("--prefix-cache needs --backend paged: the dense cache "
                  "has no page identity to share across requests")
+
+    tracer = obs.enable() if args.trace else None
+    if args.metrics_dump:
+        obs.enable_metrics()
 
     cfg = get_config(args.arch)
     mesh_spec = MESHES[args.mesh]
@@ -149,6 +162,21 @@ def main():
               f"cross_app_preempt={sp['cross_app_preemptions']}")
     sz = pool.sizing()
     print(f"[sizing/{args.policy}] init={sz.init:.0f} step={sz.step:.0f}")
+    if tracer is not None:
+        meta = {"arch": args.arch, "backend": args.backend,
+                "requests": args.requests}
+        if args.trace.endswith(".jsonl"):
+            n = obs.write_jsonl(tracer, args.trace)
+        else:
+            n = obs.write_chrome_trace(tracer, args.trace, extra_meta=meta)
+        print(f"[trace] {n} events -> {args.trace} "
+              f"(dropped={tracer.dropped}; summarize: "
+              f"python -m repro.obs {args.trace})")
+        obs.disable()
+    if args.metrics_dump:
+        print("[metrics]")
+        print(obs.current_metrics().render(), end="")
+        obs.disable_metrics()
     handle.release()
     history.save()
 

@@ -1,0 +1,30 @@
+"""repro.obs -- off-by-default observability for the serving planes.
+
+Three pieces (see docs/observability.md):
+
+* :mod:`repro.obs.trace` -- bounded ring-buffer :class:`Tracer` of
+  typed span/instant events across request lifecycle, pool
+  arbitration, compiles, and autoscale decisions;
+* :mod:`repro.obs.metrics` -- fixed-bucket :class:`Histogram` +
+  :class:`MetricsRegistry` with Prometheus text exposition;
+* :mod:`repro.obs.export` / :mod:`repro.obs.summary` -- Chrome
+  trace-event JSON / JSONL exporters and the ``python -m repro.obs``
+  trace summarizer.
+
+Everything is a no-op until :func:`enable` / :func:`enable_metrics` is
+called; instrumentation sites pay one module-attribute read + ``None``
+check when disabled.
+"""
+
+from .trace import (  # noqa: F401
+    DEFAULT_CAPACITY, Tracer, current, disable, enable,
+)
+from .metrics import (  # noqa: F401
+    LATENCY_BOUNDS, OCCUPANCY_BOUNDS, Histogram, MetricsRegistry,
+    current_metrics, disable_metrics, enable_metrics, hist_delta,
+    hist_merge,
+)
+from .export import (  # noqa: F401
+    load_events, to_chrome_events, write_chrome_trace, write_jsonl,
+)
+from .summary import request_lifecycles, summarize  # noqa: F401

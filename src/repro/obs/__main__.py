@@ -1,0 +1,34 @@
+"""``python -m repro.obs <trace-file>`` -- summarize an exported trace.
+
+Accepts either export format (Chrome trace JSON from ``--trace`` /
+``write_chrome_trace``, or JSONL from ``write_jsonl``) and prints the
+per-request lifecycle table, p50/p95/p99 latency tables, and the
+slowest-request critical path.  See docs/observability.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from .export import load_events
+from .summary import summarize
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize a repro.obs trace file "
+                    "(Chrome trace JSON or JSONL).")
+    ap.add_argument("trace", help="trace file written by --trace or "
+                                  "repro.obs.export")
+    args = ap.parse_args(argv)
+    events = load_events(args.trace)
+    try:
+        print(summarize(events))
+    except BrokenPipeError:        # `... | head` closed the pipe: fine
+        return 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,6 +40,7 @@ from repro.core.materializer import (MESHES, SINGLE_POD, MeshSpec, Plan,
                                      escalate, materialize)
 from repro.core.scheduler import GlobalScheduler, Job, PodState
 from repro.core.sizing import SizingSolution, solve_init_step
+from repro.obs import metrics as obs_metrics
 from repro.runtime.application import Application
 from repro.runtime.executors import Executor, NullExecutor
 from repro.serving.kv_cache import Request
@@ -159,6 +160,15 @@ class AppHandle:
                     shared.stats["cross_app_preemptions"],
                 "kv_device_bytes": shared.kv_device_bytes(),
             }
+        m = obs_metrics.METRICS
+        if m is not None:
+            # latency histograms for this app's lane (snapshot-dict form:
+            # bucket counts are monotonic counters, so stats_delta windows
+            # them exactly like the engine counters)
+            hist = m.app_histograms(getattr(eng, "_obs_app", None)
+                                    or self.app.name)
+            if hist:
+                out["hist"] = hist
         out["windowed"] = False
         if since is not None:
             if since.get("windowed"):
@@ -190,9 +200,13 @@ class AppHandle:
             return {"alive": False, "stats": self.engine.stats,
                     "parked": True}
         if self.app.kind == "train":
-            t0 = time.time()
+            # perf_counter, NOT time.time(): the serving engine stamps
+            # submitted_at/TTFT with perf_counter, and trace timestamps
+            # must compose with wall measurements on one monotonic clock
+            # (time.time() can step backwards under NTP adjustment)
+            t0 = time.perf_counter()
             m = self.cluster.executor.train_step(self)
-            wall = time.time() - t0
+            wall = time.perf_counter() - t0
             self.cursor += 1
             m["wall_s"] = wall
             m["straggled"] = self.watchdog.observe(self.cursor, wall)

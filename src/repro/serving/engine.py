@@ -29,6 +29,8 @@ from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.history import HistoryStore
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import PagePool, Request
 
 
@@ -106,6 +108,9 @@ class ServingEngine:
             step_fns = (runner.prefill, runner.decode)
         self.step_fns = step_fns
         self.history = history
+        # observability lane label: the tenancy view's app name, or a
+        # generic lane for private pools (obs is off unless enabled)
+        self._obs_app = getattr(pool, "app", None) or "serve"
         attach = getattr(pool, "attach", None)
         if attach is not None:          # tenancy view: register for cross-app
             attach(self)                # victim selection
@@ -113,10 +118,17 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("request", "submit", req.req_id,
+                      {"app": self._obs_app, "prompt_len": req.prompt_len,
+                       "max_new_tokens": req.max_new_tokens})
 
     def _admit(self) -> List[Request]:
         admitted = []
         attach = getattr(self.runner, "prefix_attach", None)
+        t = obs_trace.TRACER
+        m = obs_metrics.METRICS
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
             if not self.pool.admissible(req):
@@ -126,6 +138,10 @@ class ServingEngine:
                 self.queue.popleft()
                 req.state = "rejected"
                 self.stats.rejected += 1
+                if t is not None:
+                    t.instant("request", "reject", req.req_id,
+                              {"cause": "inadmissible",
+                               "prompt_len": req.prompt_len})
                 continue
             if attach is not None:
                 # prefix-cache lookup+pin BEFORE the grant: a hit shrinks
@@ -140,6 +156,16 @@ class ServingEngine:
             self.running.append(req)
             admitted.append(req)
             self.stats.admitted += 1
+            if t is not None or m is not None:
+                wait = time.perf_counter() - req.submitted_at
+                if t is not None:
+                    t.instant("request", "admit", req.req_id,
+                              {"queue_wait_s": wait,
+                               "prompt_len": req.prompt_len,
+                               "batch": len(self.running)})
+                if m is not None:
+                    m.histogram("repro_queue_wait_seconds",
+                                app=self._obs_app).observe(wait)
         return admitted
 
     def preempt(self, victim: Request) -> None:
@@ -151,6 +177,10 @@ class ServingEngine:
         victim.generated = 0          # re-execute (at-least-once)
         self.queue.appendleft(victim)
         self.stats.preempted += 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("request", "preempt", victim.req_id,
+                      {"app": self._obs_app})
 
     def preempt_newest(self) -> bool:
         """Preempt the request with the least progress; False when there is
@@ -188,20 +218,37 @@ class ServingEngine:
 
     def step(self) -> bool:
         """One engine iteration.  Returns False when fully drained."""
+        t = obs_trace.TRACER
+        m = obs_metrics.METRICS
         newly = self._admit()
         if self.step_fns is not None:
             prefill_fn, _ = self.step_fns
             for req in newly:
+                tp0 = time.perf_counter() if t is not None else 0.0
                 prefill_fn(req)
                 self.stats.prefills += 1
+                if t is not None:
+                    t.span("request", "prefill", tp0, time.perf_counter(),
+                           req.req_id, {"prompt_len": req.prompt_len})
         else:
             self.stats.prefills += len(newly)
+            if t is not None:
+                for req in newly:
+                    t.instant("request", "prefill", req.req_id,
+                              {"prompt_len": req.prompt_len})
         now = time.perf_counter()
         for req in newly:
             if req.first_token_at is None:   # not a re-admission
                 req.first_token_at = now
-                self.stats.ttft_s_sum += now - req.submitted_at
+                ttft = now - req.submitted_at
+                self.stats.ttft_s_sum += ttft
                 self.stats.ttft_count += 1
+                if t is not None:
+                    t.instant("request", "first_token", req.req_id,
+                              {"ttft_s": ttft})
+                if m is not None:
+                    m.histogram("repro_ttft_seconds",
+                                app=self._obs_app).observe(ttft)
 
         if not self.running:
             return bool(self.queue)
@@ -220,7 +267,29 @@ class ServingEngine:
             _, decode_fn = self.step_fns
             t0 = time.perf_counter()
             decode_fn(self.running)
-            self.stats.decode_s_sum += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            self.stats.decode_s_sum += t1 - t0
+            if t is not None:
+                t.span("engine", "decode_step", t0, t1, self._obs_app,
+                       {"batch": len(self.running),
+                        "queue": len(self.queue)})
+            if m is not None:
+                m.histogram("repro_decode_step_seconds",
+                            app=self._obs_app).observe(t1 - t0)
+                m.histogram("repro_batch_occupancy",
+                            obs_metrics.OCCUPANCY_BOUNDS,
+                            app=self._obs_app).observe(len(self.running))
+        else:
+            # no decode fn: no latency to time, but the occupancy signal
+            # (how full continuous batches run) is still real
+            if t is not None:
+                t.instant("engine", "decode_step", self._obs_app,
+                          {"batch": len(self.running),
+                           "queue": len(self.queue)})
+            if m is not None:
+                m.histogram("repro_batch_occupancy",
+                            obs_metrics.OCCUPANCY_BOUNDS,
+                            app=self._obs_app).observe(len(self.running))
         for req in list(self.running):
             req.generated += 1
             self.stats.tokens_generated += 1
@@ -233,6 +302,9 @@ class ServingEngine:
                     # accumulate completed requests' token lists
                     self.runner.finish(req)
                 self.stats.completed += 1
+                if t is not None:
+                    t.instant("request", "finish", req.req_id,
+                              {"tokens": req.generated})
         self.stats.decode_steps += 1
         return bool(self.queue or self.running)
 

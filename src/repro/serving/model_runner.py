@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import _from_saved, _to_savable
 from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
+from repro.obs import trace as obs_trace
 from repro.kernels import ops
 from repro.kernels.paged_attention import paged_attention_ref
 from repro.models import ImplConfig, build_model
@@ -240,9 +241,27 @@ class DenseRunner(ModelRunner):
         self.cache_len = cache_len
         self.model = build_model(cfg, ImplConfig(remat="none"))
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, cache_len))
+
+        # compile attribution: the tracer instants fire at XLA trace
+        # time (Python, shapes are static ints), so each marks one
+        # compile of this backend, not one call
+        def _decode_body(p, toks, cache, pos):
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("compile", "decode_trace", None,
+                          {"backend": "dense", "batch": toks.shape[0]})
+            return self.model.decode_step(p, toks, cache, pos)
+
+        def _prefill_body(p, b):
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("compile", "prefill_trace", None,
+                          {"backend": "dense",
+                           "tokens": b["tokens"].shape[1]})
+            return self.model.prefill(p, b, cache_len)
+
+        self._decode = jax.jit(_decode_body)
+        self._prefill = jax.jit(_prefill_body)
         self.cache = self.model.init_cache(max_batch, cache_len)
         self.slots: Dict[str, Any] = {}
 
@@ -475,6 +494,10 @@ class PagedRunner(ModelRunner):
         prompt token; ``l_src`` names the prompt pages that survive in
         the ring (the last ``ring_pages`` of them)."""
         self.prefill_traces += 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("compile", "prefill_trace", None,
+                      {"backend": "paged", "tokens": toks.shape[1]})
         cfg = self.cfg
         s = toks.shape[1]
         n_pg = s // PAGE_SIZE
@@ -577,6 +600,11 @@ class PagedRunner(ModelRunner):
         lead/base/last/cow_src are traced scalars, so warm and cold
         prefills of any offset share compiles."""
         self.prefill_traces += 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("compile", "chunk_trace", None,
+                      {"backend": "paged", "tokens": toks.shape[1],
+                       "ctx_w": ctx_table.shape[0]})
         cfg = self.cfg
         s = toks.shape[1]
         n_pg = s // PAGE_SIZE
@@ -655,6 +683,7 @@ class PagedRunner(ModelRunner):
             f"{req.req_id}: {len(pages_all)} pages < prompt {total_pg}"
         p = cached // PAGE_SIZE        # == len(req.shared_pages)
         nxt = None
+        tr = obs_trace.TRACER
         while p < total_pg:
             n_pg = min(self.chunk_pages - p % self.chunk_pages,
                        total_pg - p)
@@ -675,6 +704,9 @@ class PagedRunner(ModelRunner):
                 jnp.asarray(cow_id, jnp.int32), jnp.asarray(ctx),
                 self.store.k_pages, self.store.v_pages)
             self.prefill_pages_computed += n_pg
+            if tr is not None:
+                tr.instant("request", "prefill_chunk", req.req_id,
+                           {"start_page": p, "pages": n_pg, "lead": lead})
             p += n_pg
         if self.prefix is not None and cached % PAGE_SIZE:
             # partial-page hit: the fused lead copy above IS the COW
@@ -710,6 +742,12 @@ class PagedRunner(ModelRunner):
         req.shared_pages = list(m.phys_pages)
         req.cached_len = m.cached_len
         req.cow_src_page = m.cow_src
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("request", "prefix_pin", req.req_id,
+                      {"cached_len": m.cached_len,
+                       "shared_pages": len(m.phys_pages),
+                       "cow": m.cow_src is not None})
 
     def _prefix_insert(self, req: Request) -> None:
         """Post-prefill donation: move the prompt's freshly computed full
@@ -750,6 +788,11 @@ class PagedRunner(ModelRunner):
             created = cache.insert(toks, n_att, phys,
                                    partial_page=partial_phys)
             req.prefix_nodes = (req.prefix_nodes or []) + created
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("request", "prefix_insert", req.req_id,
+                          {"donated": len(phys),
+                           "partial": partial_phys is not None})
 
     def prefix_reattach(self, req: Request) -> bool:
         """Unpark: re-pin the shared prefix chain a parked request was
@@ -779,6 +822,11 @@ class PagedRunner(ModelRunner):
         layer writes at its group's physical page (growing table vs ring)
         and attends through its group's page table."""
         self.decode_traces += 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("compile", "decode_trace", None,
+                      {"backend": "paged", "batch": toks.shape[0],
+                       "table_w": table_g.shape[1]})
         cfg = self.cfg
         w = cfg.sliding_window
         new_k, new_v = list(k_pages), list(v_pages)

@@ -42,6 +42,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import PAGE_SIZE
 
 
@@ -183,6 +184,14 @@ class PrefixCache:
             self.stats["hits"] += 1
             self.stats["hit_pages"] += len(full_pages)
             self.stats["hit_tokens"] += cached_len
+        t = obs_trace.TRACER
+        if t is not None:
+            # the cache's own view of the lookup (the request-scoped
+            # prefix_pin instant is the attach-side receipt)
+            t.instant("pool", "prefix_lookup", None,
+                      {"hit": cached_len > 0, "cached_len": cached_len,
+                       "full_pages": len(full_pages),
+                       "cow": cow_src is not None})
         return PrefixMatch(phys_pages=full_pages, cached_len=cached_len,
                            cow_src=cow_src, nodes=chain)
 

@@ -40,6 +40,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.history import HistoryStore
+from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import PageGroups, PagePool
 
 
@@ -117,6 +118,11 @@ class SharedPagePool:
                 break
             freed += len(best[0].evict(best[1]))
         self.stats["prefix_evictions"] += freed
+        if freed:
+            t = obs_trace.TRACER
+            if t is not None:
+                t.instant("pool", "evict", None,
+                          {"pages": freed, "kind": "prefix"})
         return freed
 
     # -- physical KV device arrays (same-shape tenant aliasing) --------------
@@ -210,6 +216,11 @@ class SharedPagePool:
         p[victim_view.app] = p.get(victim_view.app, 0) + 1
         if victim_view is not requester:
             self.stats["cross_app_preemptions"] += 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("pool", "preempt_cross", requester.app,
+                      {"victim": victim_view.app,
+                       "cross": victim_view is not requester})
         return True
 
 
@@ -376,6 +387,10 @@ class PoolView(PagePool):
         ids = self._new_ids(n)
         for vid, pid in zip(ids, got):
             self._remap[vid] = pid
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("pool", "grant", self.app,
+                      {"pages": n, "used": self.used})
         return ids
 
     def _dealloc(self, pages: List[int]) -> None:
@@ -393,6 +408,10 @@ class PoolView(PagePool):
         self.used -= len(pages)
         phys = [self._remap.pop(v) for v in pages]
         self._free_ids.extend(pages)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("pool", "cache_donate", self.app,
+                      {"pages": len(pages)})
         return phys
 
     def _alloc_local(self, n: int) -> Optional[List[int]]:
@@ -428,6 +447,10 @@ class PoolView(PagePool):
     def _note_denial(self) -> None:
         d = self.shared.stats["denials"]
         d[self.app] = d.get(self.app, 0) + 1
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("pool", "denial", self.app,
+                      {"cause": self._denial_cause})
 
     # -- engine hooks --------------------------------------------------------
     def attach(self, engine) -> None:

@@ -1,0 +1,76 @@
+"""Observability fixtures: ZL004 vs the ``repro.obs`` tracer idiom.
+
+Never imported at runtime -- parsed by the analyzer only.  The tracing
+discipline (obs/trace.py) is guard-and-append with HOST-scalar args; the
+tempting mistake is stuffing a device value into an event's args dict,
+which forces a transfer+sync inside the decode/prefill hot path -- the
+exact stall ZL004 exists to catch.  Lines that MUST be flagged carry an
+``# EXPECT[ZL004]`` marker; the correct idioms below double as negative
+cases (shape/len/dataclass-int args never touch the device).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import trace as obs_trace
+
+
+def _decode_fn(params, toks):
+    return toks
+
+
+class TracedRunner:
+    def __init__(self):
+        self._decode = jax.jit(_decode_fn)
+
+    # -- violations: tracer args that sync a device value -------------------
+
+    def decode(self, req):
+        logits = self._decode(self.params, req.tokens)
+        t = obs_trace.TRACER
+        if t is not None:
+            tok = int(logits[0])  # EXPECT[ZL004]
+            t.instant("engine", "decode_step", req.req_id, {"tok": tok})
+        return logits
+
+    def prefill(self, req):
+        scores = jnp.exp(req.logits)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("request", "prefill", req.req_id,
+                      {"score": float(scores[0])})  # EXPECT[ZL004]
+        return scores
+
+    def _decode_fn(self, req):
+        logits = self._decode(self.params, req.tokens)
+        t = obs_trace.TRACER
+        if t is not None:
+            host = np.asarray(logits)  # EXPECT[ZL004]
+            t.instant("compile", "decode_trace", None,
+                      {"first": host[0]})
+        return logits
+
+
+class CleanTracedRunner:
+    def __init__(self):
+        self._decode = jax.jit(_decode_fn)
+
+    # -- correct idioms (must NOT be flagged): host-scalar args only --------
+
+    def decode(self, req):
+        logits = self._decode(self.params, req.tokens)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("engine", "decode_step", req.req_id,
+                      {"batch": logits.shape[0], "queue": len(req.queue)})
+        return logits
+
+    def prefill(self, req):
+        toks = self._decode(self.params, req.tokens)
+        t = obs_trace.TRACER
+        if t is not None:
+            t.instant("request", "prefill", req.req_id,
+                      {"prompt_len": req.prompt_len,
+                       "tokens": toks.shape[1]})
+        return toks
