@@ -143,6 +143,53 @@ def run_obs(*, n: int = 48, repeats: int = 3):
             max(overhead, 0.0), stats_off, stats_on, cap)
 
 
+def run_zensan(*, n: int = 48, repeats: int = 3):
+    """fig_zensan: the same null-engine workload with the shadow-ledger
+    sanitizer (repro.analysis.zensan) disabled vs enabled, interleaved
+    like run_obs.  Two numbers:
+
+    * ``off_tax_frac`` -- the DISABLED plane's cost.  The hook sites
+      cannot be compiled out at runtime, so this is bounded by an A/A
+      pair: two back-to-back disabled runs, min pairwise delta.  It
+      machine-checks "zero cost when disabled" down to runner noise
+      (the committed wall baselines catch absolute regressions of the
+      disabled path).
+    * ``overhead_frac`` -- the ENABLED sanitizer's tax (ledger
+      mirroring on every grant/free/pin plus the per-step conservation
+      sweep), min over disabled/enabled pairs.
+
+    The ON arm must observe hook traffic and finish with zero
+    violations -- a silent sanitizer would make its tax meaningless."""
+    from repro.analysis import zensan
+
+    prompt, gen = CLASSES["720p"]
+
+    def one(enabled):
+        prev = zensan.SAN
+        san = zensan.enable(strict=True) if enabled else None
+        if not enabled:
+            zensan._install(None)
+        try:
+            wall, stats, _, _ = run_policy("history", prompt, gen, n=n)
+        finally:
+            zensan._install(prev)
+        meta = (san.events, len(san.violations)) if san else None
+        return wall, stats, meta
+
+    aa_pairs, on_pairs, meta = [], [], None
+    for _ in range(repeats):
+        w_off1, stats_off, _ = one(False)
+        w_off2, _, _ = one(False)
+        w_on, stats_on, meta = one(True)
+        aa_pairs.append((w_off1, w_off2))
+        on_pairs.append((w_off2, w_on))
+    off_tax = max(min((b - a) / a for a, b in aa_pairs), 0.0)
+    overhead = max(min((on - off) / off for off, on in on_pairs), 0.0)
+    w_off = min(min(p) for p in aa_pairs)
+    w_on = min(p[1] for p in on_pairs)
+    return (w_off, w_on, off_tax, overhead, stats_off, stats_on, meta)
+
+
 def run_tenancy(shared: bool, n_per_app: int = 32, pool_pages: int = 192,
                 max_steps: int = 200_000):
     """Three request-length-class apps on one pod, through the runtime."""
@@ -453,6 +500,31 @@ def main() -> None:
     print(f"[artifact] {trace_path}", flush=True)
     emit_json("serving_obs",
               extra={"smoke": args.smoke, "n": n_obs, "repeats": rep},
+              rows_from=mark)
+
+    # Part 7: zensan sanitizer tax -- disabled A/A noise bound + enabled
+    # ledger/sweep overhead over the same null-engine workload
+    # (BENCH_serving_zensan.json).  zensan_active=1 asserts the ON arm
+    # actually saw hook traffic AND flagged nothing (gated exact).
+    mark = rows_mark()
+    n_zs = 24 if args.smoke else 96
+    rep = 5 if args.smoke else 3
+    run_zensan(n=n_zs, repeats=1)        # warm-up (first-touch costs)
+    (w_off, w_on, off_tax, zs_over,
+     stats_off, stats_on, zs_meta) = run_zensan(n=n_zs, repeats=rep)
+    zs_events, zs_viol = zs_meta
+    row("fig_zensan/off", w_off,
+        f"completed={stats_off.completed};"
+        f"decode_steps={stats_off.decode_steps};"
+        f"zensan_off_tax_frac={off_tax:.4f}")
+    row("fig_zensan/on", w_on,
+        f"completed={stats_on.completed};"
+        f"decode_steps={stats_on.decode_steps};"
+        f"events={zs_events};"
+        f"zensan_active={int(zs_events > 0 and zs_viol == 0)};"
+        f"zensan_overhead_frac={zs_over:.4f}")
+    emit_json("serving_zensan",
+              extra={"smoke": args.smoke, "n": n_zs, "repeats": rep},
               rows_from=mark)
 
 

@@ -42,7 +42,7 @@ DEFAULT_CURRENT = os.environ.get("BENCH_ARTIFACT_DIR", "artifacts/bench")
 #: rel_tol is the allowed fractional move in the WORSE direction;
 #: abs_slack is added on top (|delta| <= base*rel_tol + abs_slack passes).
 EXACT = ("completed", "token_parity", "tokens_match", "finished",
-         "restored", "kv_stores", "lifecycle_ok")
+         "restored", "kv_stores", "lifecycle_ok", "zensan_active")
 
 
 def rule_for(metric: str):
@@ -63,6 +63,16 @@ def rule_for(metric: str):
         # a timing, so allow generous relative drift plus an absolute
         # slack that keeps the gate at the <5% overhead ceiling
         return ("higher_worse", 1.0, 0.05)
+    if metric == "zensan_off_tax_frac":
+        # zero-cost-when-disabled, machine-checked: min over interleaved
+        # disabled/disabled pairs bounds the hook plumbing below runner
+        # noise.  Baseline is 0.0, so the gate is purely the absolute
+        # slack -- the 0% ceiling with a noise allowance.
+        return ("higher_worse", 0.0, 0.05)
+    if metric == "zensan_overhead_frac":
+        # enabled-sanitizer tax (ledger mirroring + per-step sweeps):
+        # a timing, so generous drift like overhead_frac above
+        return ("higher_worse", 1.0, 0.25)
     if metric == "kv_bytes_ratio":
         return ("lower_worse", 0.25, 0.0)
     if metric == "prefix_hit_rate":

@@ -5,11 +5,20 @@ clean tree.  Suppressed findings are listed (with their justification)
 when ``--show-suppressed`` is given and always counted in the per-rule
 summary, so the job log records how many invariant exceptions the tree
 carries and why.
+
+``--format`` selects the output encoding without touching the exit
+codes: ``text`` (default, human-readable + per-rule summary), ``json``
+(one machine-readable document for dashboards/diffing), ``github``
+(workflow-command annotations -- ``::error`` per open finding,
+``::notice`` per suppressed one -- so findings surface inline on the
+PR diff).  ``--strict-suppressions`` additionally fails the gate on
+stale directives that no longer suppress anything.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import List
 
@@ -29,6 +38,42 @@ def summarize(findings: List[Finding]) -> str:
     return "\n".join(lines)
 
 
+def render_json(findings: List[Finding]) -> str:
+    open_n = sum(1 for f in findings if not f.suppressed)
+    doc = {
+        "findings": [
+            {"rule": f.rule, "path": f.path, "line": f.line,
+             "message": f.message, "suppressed": f.suppressed,
+             "reason": f.reason}
+            for f in findings
+        ],
+        "open": open_n,
+        "suppressed": len(findings) - open_n,
+        "ok": open_n == 0,
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
+def _gh_escape(text: str) -> str:
+    """GitHub workflow-command data escaping (the documented set)."""
+    return (text.replace("%", "%25").replace("\r", "%0D")
+            .replace("\n", "%0A"))
+
+
+def render_github(findings: List[Finding],
+                  show_suppressed: bool) -> List[str]:
+    lines = []
+    for f in findings:
+        if f.suppressed and not show_suppressed:
+            continue
+        level = "notice" if f.suppressed else "error"
+        msg = f.message if not f.suppressed else (
+            f"{f.message} [suppressed: {f.reason}]")
+        lines.append(f"::{level} file={f.path},line={f.line},"
+                     f"title=zenlint {f.rule}::{_gh_escape(msg)}")
+    return lines
+
+
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -42,6 +87,14 @@ def main(argv: List[str] | None = None) -> int:
                     help="run only these rule ids (repeatable)")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also print suppressed findings with reasons")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text",
+                    help="output encoding (exit codes are identical): "
+                         "human text, one JSON document, or GitHub "
+                         "workflow-command annotations")
+    ap.add_argument("--strict-suppressions", action="store_true",
+                    help="also fail on stale directives that no longer "
+                         "suppress any finding")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
     args = ap.parse_args(argv)
@@ -60,16 +113,26 @@ def main(argv: List[str] | None = None) -> int:
                   file=sys.stderr)
             return 2
 
-    findings = analyze_paths(args.paths, rules)
+    findings = analyze_paths(args.paths, rules,
+                             strict_suppressions=args.strict_suppressions)
     open_findings = [f for f in findings if not f.suppressed]
-    for f in findings:
-        if not f.suppressed or args.show_suppressed:
-            print(f.render())
-    print()
-    print(summarize(findings))
-    print(f"\nzenlint: {'FAIL' if open_findings else 'OK'} "
-          f"({len(open_findings)} open finding(s), "
-          f"{len(findings) - len(open_findings)} suppressed)")
+    if args.format == "json":
+        print(render_json(findings))
+    elif args.format == "github":
+        for line in render_github(findings, args.show_suppressed):
+            print(line)
+        print(f"zenlint: {'FAIL' if open_findings else 'OK'} "
+              f"({len(open_findings)} open finding(s), "
+              f"{len(findings) - len(open_findings)} suppressed)")
+    else:
+        for f in findings:
+            if not f.suppressed or args.show_suppressed:
+                print(f.render())
+        print()
+        print(summarize(findings))
+        print(f"\nzenlint: {'FAIL' if open_findings else 'OK'} "
+              f"({len(open_findings)} open finding(s), "
+              f"{len(findings) - len(open_findings)} suppressed)")
     return 1 if open_findings else 0
 
 

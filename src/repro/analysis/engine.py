@@ -151,6 +151,28 @@ class FuncInfo:
         return sorted(out, key=lambda n: (n.lineno, n.col_offset))
 
 
+def own_statements(node: ast.AST) -> List[ast.stmt]:
+    """The function's OWN statements in source order -- unlike
+    FuncInfo.statements() this does not descend into nested defs or
+    classes, whose returns and bindings belong to a different frame.
+    The interprocedural summaries (ZL001/ZL005) need this distinction:
+    a nested closure's ``return`` says nothing about the enclosing
+    function's return value."""
+    out: List[ast.stmt] = []
+
+    def visit(n):
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            if isinstance(child, ast.stmt):
+                out.append(child)
+            visit(child)
+
+    visit(node)
+    return sorted(out, key=lambda n: (n.lineno, n.col_offset))
+
+
 # ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
@@ -180,6 +202,10 @@ class Suppressions:
     def __init__(self, source: str):
         self.by_line: Dict[int, Tuple[Set[str], str]] = {}
         self.unjustified: List[Tuple[int, str]] = []
+        #: (line, rule) pairs that actually suppressed a finding --
+        #: the complement is the stale set ``--strict-suppressions``
+        #: reports
+        self.used: Set[Tuple[int, str]] = set()
         lines = source.splitlines()
         comments = list(_comment_tokens(source))
         comment_only = {ln for ln, col, _ in comments
@@ -210,8 +236,18 @@ class Suppressions:
     def reason_for(self, rule: str, line: int) -> Optional[str]:
         hit = self.by_line.get(line)
         if hit and rule.upper() in hit[0]:
+            self.used.add((line, rule.upper()))
             return hit[1]
         return None
+
+    def stale(self, ran_rules: Set[str]) -> Iterator[Tuple[int, str]]:
+        """Directives that suppressed NOTHING this run, restricted to
+        the rules that actually ran (a ``--rule``-filtered run must not
+        call another rule's directive stale)."""
+        for line, (rules, _reason) in sorted(self.by_line.items()):
+            for rid in sorted(rules):
+                if rid in ran_rules and (line, rid) not in self.used:
+                    yield line, rid
 
 
 # ---------------------------------------------------------------------------
@@ -330,9 +366,14 @@ def default_rules() -> List[Rule]:
 
 
 def analyze_source(source: str, path: str = "<string>",
-                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+                   rules: Optional[Sequence[Rule]] = None,
+                   strict_suppressions: bool = False) -> List[Finding]:
     """Findings of one source blob (suppressions applied, engine
-    diagnostics included).  The fixture tests drive this directly."""
+    diagnostics included).  The fixture tests drive this directly.
+    With ``strict_suppressions`` a directive that suppressed nothing is
+    itself a finding: stale suppressions hide regressions of the VERY
+    invariant they once excused, because the next real finding on that
+    line inherits the old justification unseen."""
     rules = list(rules) if rules is not None else default_rules()
     try:
         mod = Module(path, source)
@@ -355,6 +396,15 @@ def analyze_source(source: str, path: str = "<string>",
             findings.append(Finding(rule.rule_id, path, line, message,
                                     suppressed=reason is not None,
                                     reason=reason or ""))
+    if strict_suppressions:
+        ran = {r.rule_id for r in rules}
+        for line, rid in mod.suppressions.stale(ran):
+            findings.append(Finding(
+                ENGINE_RULE, path, line,
+                f"stale suppression of [{rid}]: no {rid} finding on "
+                "this line -- the invariant holds again, delete the "
+                "directive before it silently excuses the next real "
+                "finding"))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings
 
@@ -373,11 +423,13 @@ def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
 
 
 def analyze_paths(paths: Iterable[str],
-                  rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+                  rules: Optional[Sequence[Rule]] = None,
+                  strict_suppressions: bool = False) -> List[Finding]:
     rules = list(rules) if rules is not None else default_rules()
     findings: List[Finding] = []
     for path in iter_py_files(paths):
         with open(path, encoding="utf-8") as f:
             source = f.read()
-        findings.extend(analyze_source(source, path, rules))
+        findings.extend(analyze_source(source, path, rules,
+                                       strict_suppressions))
     return findings

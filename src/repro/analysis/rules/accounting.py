@@ -26,27 +26,43 @@ This rule flags, per function:
   the exit path walks off with pages reclaimed but their receipt
   unconsumed (the "all exits" half of the invariant, approximated
   lexically).
+
+**Interprocedural flow**: a helper that merely relays a receipt --
+``def _park_all(pool, req): return pool.reclaim(req)`` -- launders the
+verb name away, so a caller discarding ``_park_all(...)`` drops the
+same pages the inline version would.  The rule therefore widens the
+verb set per module: a locally defined, unambiguously named function
+whose every valued ``return`` is a receipt call (directly, or a bare
+name bound straight from one) is itself receipt-bearing for its
+callers.  The criterion is deliberately strict -- a function returning
+a dict that merely *contains* a receipt (``parking.park_app``) keeps
+custody of it and is NOT widened -- and iterates to a fixpoint so
+chains of relays are followed.
 """
 
 from __future__ import annotations
 
 import ast
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Set, Tuple
 
-from repro.analysis.engine import Module, Rule, dotted, stmt_exprs
+from repro.analysis.engine import (Module, Rule, dotted, own_statements,
+                                   stmt_exprs)
 
 RECEIPT_CALLS = {"reclaim", "drain", "park", "regrant",
                  "pin", "unpin", "cow_grant"}
+
+#: fixpoint bound for relay chains (helper returning a helper's receipt)
+_MAX_ROUNDS = 4
 
 
 def _leaf(path: Optional[str]) -> Optional[str]:
     return None if path is None else path.rsplit(".", 1)[-1]
 
 
-def _receipt_call(node: ast.AST) -> Optional[str]:
+def _receipt_call(node: ast.AST, verbs: Set[str]) -> Optional[str]:
     if isinstance(node, ast.Call):
         leaf = _leaf(dotted(node.func))
-        if leaf in RECEIPT_CALLS:
+        if leaf in verbs:
             return leaf
     return None
 
@@ -61,14 +77,61 @@ class AccountingPairing(Rule):
     rule_id = "ZL005"
     title = "reclaim/park receipts must be consumed on every path"
 
+    def _verbs(self, mod: Module) -> Set[str]:
+        """RECEIPT_CALLS widened with the module's receipt-relaying
+        functions (every valued return IS a receipt, see module doc)."""
+        byname: Dict[str, list] = {}
+        for f in mod.functions():
+            byname.setdefault(f.name, []).append(f)
+        cands = {n: fs[0] for n, fs in byname.items()
+                 if len(fs) == 1 and n not in RECEIPT_CALLS}
+        verbs = set(RECEIPT_CALLS)
+        for _ in range(_MAX_ROUNDS):
+            grown = False
+            for name, func in cands.items():
+                if name in verbs:
+                    continue
+                relayed: Dict[str, bool] = {}
+                valued, all_receipts = 0, True
+                for stmt in own_statements(func.node):
+                    if (isinstance(stmt, ast.Return)
+                            and stmt.value is not None):
+                        valued += 1
+                        v = stmt.value
+                        if not (_receipt_call(v, verbs) is not None
+                                or (isinstance(v, ast.Name)
+                                    and relayed.get(v.id, False))):
+                            all_receipts = False
+                        continue
+                    # any intermediate read means the helper consumed
+                    # the receipt itself (e.g. folding a count into
+                    # stats) -- its return value is informational, not
+                    # a relayed receipt
+                    for expr in stmt_exprs(stmt):
+                        for name in [n for n, ok in relayed.items()
+                                     if ok and _reads_name(expr, n)]:
+                            relayed[name] = False
+                    if (isinstance(stmt, ast.Assign)
+                            and len(stmt.targets) == 1
+                            and isinstance(stmt.targets[0], ast.Name)):
+                        relayed[stmt.targets[0].id] = (
+                            _receipt_call(stmt.value, verbs) is not None)
+                if valued and all_receipts:
+                    verbs.add(name)
+                    grown = True
+            if not grown:
+                break
+        return verbs
+
     def run(self, mod: Module) -> Iterator[Tuple[int, str]]:
+        verbs = self._verbs(mod)
         for func in mod.functions():
             # name -> (verb, bind line), pending first use
             pending: Dict[str, Tuple[str, int]] = {}
             for stmt in func.statements():
                 # discarded outright: `pool.reclaim(req)` as a statement
                 if isinstance(stmt, ast.Expr):
-                    verb = _receipt_call(stmt.value)
+                    verb = _receipt_call(stmt.value, verbs)
                     if verb is not None:
                         yield (stmt.lineno,
                                f"result of {verb}() discarded: the receipt "
@@ -100,7 +163,7 @@ class AccountingPairing(Rule):
                     tgt = stmt.targets[0]
                     verb = None
                     for n in ast.walk(stmt.value):
-                        verb = verb or _receipt_call(n)
+                        verb = verb or _receipt_call(n, verbs)
                     if verb is not None and isinstance(tgt, ast.Name):
                         pending[tgt.id] = (verb, stmt.lineno)
             for name, (verb, line) in pending.items():

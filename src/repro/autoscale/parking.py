@@ -37,6 +37,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.analysis import zensan
 from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import Request
 
@@ -95,6 +96,11 @@ def park_app(handle) -> Dict:
                "drained_requests": len(drained),
                "kv_arrays_dropped": bool((runner_state or {}).get(
                    "arrays_dropped", runner_state is not None))}
+    s = zensan.SAN
+    if s is not None:
+        # quiescent point: every drained page must be back on the free
+        # list, with one outstanding park receipt per drained request
+        s.check(eng.pool)
     t = obs_trace.TRACER
     if t is not None:
         t.instant("autoscale", "park", handle.app.name, dict(receipt))
@@ -149,11 +155,19 @@ def unpark_app(handle) -> Dict:
         if "params" in handle.exec_state:
             handle.exec_state["params"] = runner.params
     eng.running.extend(pr.req for pr in restored)
+    s = zensan.SAN
     for pr in requeued:          # at-least-once fallback: re-execute
         pr.req.generated = 0
         pr.req.state = "queued"
         eng.queue.appendleft(pr.req)
         eng.stats.preempted += 1
+        if s is not None:
+            # the requeued request re-enters from scratch: its park
+            # receipt is resolved (nothing left to regrant), not stranded
+            s.park_cancel(eng.pool, pr.req.req_id)
+    if s is not None:
+        s.unpark_done(eng.pool, getattr(eng.pool, "app", handle.app.name))
+        s.check(eng.pool)
     del handle.exec_state["parked"]
     receipt = {"restored_requests": len(restored),
                "requeued_requests": len(requeued),

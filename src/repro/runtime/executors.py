@@ -246,10 +246,17 @@ class JaxExecutor(Executor):
                     prefix_cache.users.add(app.name)
                 else:
                     # private pool (or un-aliased tenant): a private cache
-                    # still dedups this app's own prompt overlap
+                    # still dedups this app's own prompt overlap.  Evicted
+                    # pages must return to whatever free list GRANTED
+                    # them: the pod's for a shared-pool view (its own
+                    # `free` list is a dead stub -- extending it would
+                    # leak the pages from the pod forever), the pool's
+                    # own otherwise
+                    shared = getattr(pool, "shared", None)
+                    free_fn = (shared._give if shared is not None
+                               else pool._give)
                     prefix_cache = PrefixCache(
-                        (None, app.config.name, self.seed),
-                        pool.free.extend)
+                        (None, app.config.name, self.seed), free_fn)
                 pool.prefix_cache = prefix_cache
             elif bool(opts.get("prefix_cache", False)):
                 # dense backend: reject loudly inside build_runner below

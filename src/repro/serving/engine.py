@@ -28,6 +28,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.analysis import zensan
 from repro.core.history import HistoryStore
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -251,6 +252,9 @@ class ServingEngine:
                                 app=self._obs_app).observe(ttft)
 
         if not self.running:
+            s = zensan.SAN
+            if s is not None:
+                s.check(self.pool)
             return bool(self.queue)
 
         # Grow grants before decoding (horizon=1: the next token's write
@@ -306,6 +310,9 @@ class ServingEngine:
                     t.instant("request", "finish", req.req_id,
                               {"tokens": req.generated})
         self.stats.decode_steps += 1
+        s = zensan.SAN
+        if s is not None:
+            s.check(self.pool)
         return bool(self.queue or self.running)
 
     def run_to_completion(self, max_steps: int = 1_000_000) -> EngineStats:

@@ -19,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis import zensan
 from repro.core.history import HistoryStore
 from repro.core.sizing import SizingSolution, solve_init_step
 
@@ -209,19 +210,47 @@ class PagePool:
             self.stats["prefix_evictions"] += freed
         if n > len(self.free):
             return None
-        return [self.free.pop() for _ in range(n)]
+        got = [self.free.pop() for _ in range(n)]
+        s = zensan.SAN
+        if s is not None:
+            # a private pool's ids are physical AND request-visible:
+            # take+grant collapse into one step (no remap in between)
+            s.take(self, got)
+            s.grant(self, got, got)
+        return got
 
     def _dealloc(self, pages: List[int]) -> None:
+        s = zensan.SAN
+        if s is not None:
+            s.release(self, pages, pages)
+            s.give(self, pages)
+        self.free.extend(pages)
+
+    def _give(self, pages: List[int]) -> None:
+        """Return PHYSICAL pages straight to the free list -- the
+        prefix cache's eviction path (mirrors ``SharedPagePool._give``:
+        cache pages were donated out of request accounting, so they
+        come back without touching any request/view bookkeeping)."""
+        s = zensan.SAN
+        if s is not None:
+            s.give(self, pages)
         self.free.extend(pages)
 
     def _alloc_local(self, n: int) -> Optional[List[int]]:
         """Take n local-group (ring) pages from the local id space."""
         if self.free_local is None or n > len(self.free_local):
             return None
-        return [self.free_local.pop() for _ in range(n)]
+        got = [self.free_local.pop() for _ in range(n)]
+        s = zensan.SAN
+        if s is not None:
+            s.grant_local(self, got)
+        return got
 
     def _dealloc_local(self, pages: List[int]) -> None:
         if pages:
+            s = zensan.SAN
+            if s is not None:
+                s.release_local(self, pages)
             self.free_local.extend(pages)
 
     def _page_cap(self) -> int:
@@ -243,7 +272,11 @@ class PagePool:
         are already physical and the pages simply stay off the free list
         (the cache's free_fn puts them back on eviction); a PoolView
         additionally uncharges its quota and forgets the remap."""
-        return list(ids)
+        phys = list(ids)
+        s = zensan.SAN
+        if s is not None:
+            s.cache_donated(self, phys, self.prefix_cache)
+        return phys
 
     def prefix_detach(self, req: Request, keep: bool = False) -> int:
         """Unpin a request's prefix-cache nodes (idempotent).  Returns
@@ -399,6 +432,9 @@ class PagePool:
         req.parked_shared = len(req.shared_pages)
         self.prefix_detach(req, keep=True)
         req.state = "parked"
+        s = zensan.SAN
+        if s is not None:
+            s.parked(self, req.req_id, len(phys), len(phys_local))
         return phys, phys_local
 
     def regrant(self, req: Request, n: int, n_local: int = 0) -> bool:
@@ -418,6 +454,9 @@ class PagePool:
         req.pages = got
         req.local_pages = got_local
         req.state = "running"
+        s = zensan.SAN
+        if s is not None:
+            s.regranted(self, req.req_id, n, n_local)
         return True
 
     @property

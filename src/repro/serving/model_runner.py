@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import zensan
 from repro.checkpoint.checkpointer import _from_saved, _to_savable
 from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
 from repro.obs import trace as obs_trace
@@ -297,6 +298,9 @@ class DenseRunner(ModelRunner):
     def decode(self, running: List[Request]) -> None:
         if not running:
             return
+        s = zensan.SAN
+        if s is not None:
+            s.dense_state(self, running)
         toks = np.zeros((self.max_batch, 1), np.int32)
         pos = 0
         for req in running:
@@ -711,8 +715,6 @@ class PagedRunner(ModelRunner):
         if self.prefix is not None and cached % PAGE_SIZE:
             # partial-page hit: the fused lead copy above IS the COW
             self.prefix.stats["cow_copies"] += 1
-        # zenlint: ignore[ZL004] -- first-token extraction: once per
-        # request at prefill, the designed sync point (see DenseRunner).
         self.generated[req.req_id] = [int(nxt)]
 
     # -- prefix-cache lifecycle ----------------------------------------------
@@ -890,6 +892,12 @@ class PagedRunner(ModelRunner):
                   for r in running]
         l_phys = ([self._phys_local(r.local_pages) for r in running]
                   if self.use_rings else [[] for _ in running])
+        s = zensan.SAN
+        if s is not None:
+            # runtime twin of zenlint ZL001: every id entering the
+            # table must be this view's grant or a cache page
+            s.table(self.engine.pool if self.engine is not None else None,
+                    g_phys, l_phys)
         maxp_b = _next_pow2(max(max(len(p) for p in g_phys), 1))
         toks = np.zeros((b, 1), np.int32)
         positions = np.zeros((b, 1), np.int32)

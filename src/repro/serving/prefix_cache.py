@@ -42,6 +42,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.analysis import zensan
 from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import PAGE_SIZE
 
@@ -180,6 +181,9 @@ class PrefixCache:
         for n in chain:
             n.refs += 1
             self._touch(n)
+        s = zensan.SAN
+        if s is not None:
+            s.pinned(self, chain)
         if cached_len > 0:
             self.stats["hits"] += 1
             self.stats["hit_pages"] += len(full_pages)
@@ -206,6 +210,9 @@ class PrefixCache:
             self._touch(n)
             if n.refs == 0:
                 released += 1
+        s = zensan.SAN
+        if s is not None:
+            s.unpinned(self, nodes)
         self.stats["unpinned"] += released
         return released
 
@@ -274,6 +281,9 @@ class PrefixCache:
         for n in created:
             n.refs += 1
             self._touch(n)
+        s = zensan.SAN
+        if s is not None:
+            s.inserted(self, created)
         self.stats["inserted_pages"] += len(created)
         return created
 
@@ -300,6 +310,9 @@ class PrefixCache:
         else:
             parent.partials.remove(node)
         self.nodes.remove(node)
+        s = zensan.SAN
+        if s is not None:
+            s.evicted(self, node)
         freed = [node.page]
         self.free_fn(freed)
         self.stats["evicted_pages"] += len(freed)

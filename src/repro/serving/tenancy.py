@@ -39,6 +39,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.analysis import zensan
 from repro.core.history import HistoryStore
 from repro.obs import trace as obs_trace
 from repro.serving.kv_cache import PageGroups, PagePool
@@ -97,9 +98,16 @@ class SharedPagePool:
             self._evict_prefix(n - len(self.free))
         if n > len(self.free):
             return None
-        return [self.free.pop() for _ in range(n)]
+        got = [self.free.pop() for _ in range(n)]
+        s = zensan.SAN
+        if s is not None:
+            s.take(self, got)
+        return got
 
     def _give(self, pages: List[int]) -> None:
+        s = zensan.SAN
+        if s is not None:
+            s.give(self, pages)
         self.free.extend(pages)
 
     def _evict_prefix(self, need: int) -> int:
@@ -387,6 +395,9 @@ class PoolView(PagePool):
         ids = self._new_ids(n)
         for vid, pid in zip(ids, got):
             self._remap[vid] = pid
+        s = zensan.SAN
+        if s is not None:
+            s.grant(self, ids, got)
         t = obs_trace.TRACER
         if t is not None:
             t.instant("pool", "grant", self.app,
@@ -397,6 +408,9 @@ class PoolView(PagePool):
         self.used -= len(pages)
         phys = [self._remap.pop(v) for v in pages]
         self._free_ids.extend(pages)
+        s = zensan.SAN
+        if s is not None:
+            s.release(self, pages, phys)
         self.shared._give(phys)
 
     def cache_donate(self, pages: Sequence[int]) -> List[int]:
@@ -408,6 +422,9 @@ class PoolView(PagePool):
         self.used -= len(pages)
         phys = [self._remap.pop(v) for v in pages]
         self._free_ids.extend(pages)
+        s = zensan.SAN
+        if s is not None:
+            s.cache_donated(self, phys, self.prefix_cache)
         t = obs_trace.TRACER
         if t is not None:
             t.instant("pool", "cache_donate", self.app,
@@ -435,6 +452,9 @@ class PoolView(PagePool):
         ids = self._new_ids(n, local=True)
         for vid, pid in zip(ids, got):
             self._remap_local[vid] = pid
+        s = zensan.SAN
+        if s is not None:
+            s.grant_local(self, got)
         return ids
 
     def _dealloc_local(self, pages: List[int]) -> None:
@@ -442,6 +462,9 @@ class PoolView(PagePool):
             self.used_local -= len(pages)
             phys = [self._remap_local.pop(v) for v in pages]
             self._free_ids_local.extend(pages)
+            s = zensan.SAN
+            if s is not None:
+                s.release_local(self, phys)
             self._local_free().extend(phys)
 
     def _note_denial(self) -> None:
@@ -469,6 +492,9 @@ class PoolView(PagePool):
         """Detach this app from the pod pool (on application release).
         The last aliasing tenant of a KV array store takes the store --
         and its device HBM -- with it."""
+        s = zensan.SAN
+        if s is not None:
+            s.view_closed(self)
         self.engine = None
         if self.kv_store is not None:
             st = self.kv_store

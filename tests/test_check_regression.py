@@ -52,6 +52,11 @@ def test_rule_for_classification():
     assert cr.rule_for("decode_compiles") == ("higher_worse", 0.0, 1.0)
     assert cr.rule_for("kv_bytes_ratio")[0] == "lower_worse"
     assert cr.rule_for("reuse_frac")[0] == "lower_worse"
+    # the zensan entries must precede the generic *_frac catch-all: the
+    # taxes are higher_worse, not lower_worse
+    assert cr.rule_for("zensan_off_tax_frac") == ("higher_worse", 0.0, 0.05)
+    assert cr.rule_for("zensan_overhead_frac")[0] == "higher_worse"
+    assert cr.rule_for("zensan_active") == ("exact", 0.0, 0.0)
     assert cr.rule_for("some_novel_metric") is None
 
 

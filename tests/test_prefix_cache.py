@@ -132,6 +132,54 @@ def test_interior_nodes_survive_until_leaves_go():
     assert freed == [7, 6, 5]
 
 
+def test_shared_take_global_lru_across_pod_caches_behind_pins():
+    """``SharedPagePool._take`` under pool pressure: refcount-0 leaves
+    sitting BEHIND pinned chain heads are the only victims, taken
+    oldest-first ACROSS both pod caches; the pinned heads themselves
+    are never evicted, so a shortfall bigger than the evictable tail
+    is denied rather than satisfied by stealing pins."""
+    shared = SharedPagePool(8, history=HistoryStore())
+    ca = shared.prefix_cache(("a",),
+                             lambda: PrefixCache(("a",), shared._give))
+    cb = shared.prefix_cache(("b",),
+                             lambda: PrefixCache(("b",), shared._give))
+    toks = _toks(2 * PAGE_SIZE)
+    chain_a = ca.insert(toks, 0, shared._take(2))
+    chain_b = cb.insert(toks, 0, shared._take(2))
+    # chain heads stay pinned (in-flight requests decode through them);
+    # the leaves drop to refcount 0.  A later lookup re-touches a's
+    # chain, so b's leaf is the globally least-recently-used candidate.
+    cb.unpin([chain_b[1]])
+    ca.unpin([chain_a[1]])
+    m = ca.pin(toks)
+    ca.unpin(m.nodes)
+    assert len(shared.free) == 4
+    got = shared._take(5)                 # shortfall of 1: evict ONE page
+    assert got is not None and len(got) == 5
+    assert chain_b[1] not in cb.nodes, "global LRU: b's older leaf first"
+    assert chain_a[1] in ca.nodes, "a's younger leaf must survive"
+    assert shared.stats["prefix_evictions"] == 1
+    shared._give(got)
+    got = shared._take(6)                 # next shortfall: a's leaf goes
+    assert got is not None
+    assert chain_a[1] not in ca.nodes
+    assert shared.stats["prefix_evictions"] == 2
+    shared._give(got)
+    # only the two pinned heads remain cached: a demand beyond the
+    # evictable tail is DENIED and the pins are untouched
+    assert shared._take(7) is None
+    assert chain_a[0] in ca.nodes and chain_b[0] in cb.nodes
+    assert chain_a[0].refs == 1 and chain_b[0].refs == 1
+    # once the in-flight pins release, the heads become ordinary
+    # refcount-0 candidates and the full pool is reclaimable
+    ca.unpin([chain_a[0]])
+    cb.unpin([chain_b[0]])
+    got = shared._take(8)
+    assert got is not None and len(got) == 8
+    assert ca.num_pages == 0 and cb.num_pages == 0
+    shared._give(got)
+
+
 def test_flush_leaves_pinned_nodes_alone():
     cache, freed = _cache()
     keep = cache.insert(_toks(PAGE_SIZE), 0, [1])

@@ -210,6 +210,138 @@ def test_cli_seeded_violation_fails_the_gate(capsys):
 
 
 def test_repo_tree_is_gate_clean(capsys):
-    """The actual CI gate invocation, run as a local regression."""
+    """The actual CI gate invocation, run as a local regression --
+    strict: every suppression in the tree must still be earning its
+    keep."""
     paths = [str(REPO / p) for p in ("src", "benchmarks", "examples")]
-    assert zenlint_main(paths) == 0, capsys.readouterr().out
+    assert zenlint_main(["--strict-suppressions"] + paths) == 0, \
+        capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# interprocedural summaries (beyond the EXPECT fixtures: unit checks of
+# the summary machinery itself)
+# ---------------------------------------------------------------------------
+
+def test_interproc_zl001_helper_sink_param():
+    src = ("def _free(pool, ids):\n"
+           "    pool._give(ids)\n"
+           "def caller(pool, req):\n"
+           "    _free(pool, req.pages)\n")
+    (finding,) = analyze_source(src)
+    assert finding.rule == "ZL001"
+    assert finding.line == 4
+    assert "_free()" in finding.message
+
+
+def test_interproc_zl001_ambiguous_name_is_skipped():
+    src = ("def _h(pool, ids):\n"
+           "    pool._give(ids)\n"
+           "class A:\n"
+           "    def _h(self, pool, ids):\n"
+           "        return len(ids)\n"
+           "def caller(pool, req):\n"
+           "    _h(pool, req.pages)\n")
+    assert analyze_source(src) == []
+
+
+def test_interproc_zl001_known_names_not_summarized():
+    """A local def shadowing a pool verb must not override the built-in
+    vocabulary (the real verbs are polymorphic across PoolView)."""
+    src = ("def to_physical(pool, ids):\n"
+           "    pool._give(ids)\n"
+           "def caller(pool, req):\n"
+           "    return to_physical(pool, req.pages)\n")
+    assert analyze_source(src) == []
+
+
+def test_interproc_zl005_relay_vs_internal_consumption():
+    relay = ("def _relay(pool, req):\n"
+             "    return pool.reclaim(req)\n"
+             "def caller(pool, req):\n"
+             "    _relay(pool, req)\n")
+    (finding,) = analyze_source(relay)
+    assert finding.rule == "ZL005" and finding.line == 4
+    consumed = ("def _detach(cache, nodes, stats):\n"
+                "    released = cache.unpin(nodes)\n"
+                "    stats.append(released)\n"
+                "    return released\n"
+                "def caller(cache, req, stats):\n"
+                "    _detach(cache, req.prefix_nodes, stats)\n")
+    assert analyze_source(consumed) == []
+
+
+# ---------------------------------------------------------------------------
+# output formats (exit codes must be identical across all three)
+# ---------------------------------------------------------------------------
+
+def test_cli_format_json(tmp_path, capsys):
+    import json
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(VIOLATION.format(""))
+    assert zenlint_main(["--format", "json", str(bad)]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["open"] == 1 and doc["ok"] is False
+    (f,) = doc["findings"]
+    assert f["rule"] == "ZL001" and f["path"] == str(bad)
+    ok = tmp_path / "ok.py"
+    ok.write_text(VIOLATION.format("  # zenlint: ignore[ZL001] -- why"))
+    assert zenlint_main(["--format", "json", str(ok)]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is True and doc["suppressed"] == 1
+    assert doc["findings"][0]["reason"] == "why"
+
+
+def test_cli_format_github(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(VIOLATION.format(""))
+    assert zenlint_main(["--format", "github", str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert f"::error file={bad},line=" in out
+    assert "title=zenlint ZL001::" in out
+    ok = tmp_path / "ok.py"
+    ok.write_text(VIOLATION.format("  # zenlint: ignore[ZL001] -- why"))
+    assert zenlint_main(["--format", "github", "--show-suppressed",
+                         str(ok)]) == 0
+    out = capsys.readouterr().out
+    assert "::notice" in out and "::error" not in out
+
+
+def test_cli_format_github_escapes_newlines(tmp_path, capsys):
+    """Workflow-command data is %-escaped; a multi-line message must
+    stay a single annotation line."""
+    from repro.analysis.__main__ import _gh_escape
+
+    assert _gh_escape("a\nb%c") == "a%0Ab%25c"
+
+
+# ---------------------------------------------------------------------------
+# stale-suppression detection (--strict-suppressions)
+# ---------------------------------------------------------------------------
+
+def test_stale_suppression_flagged_only_in_strict_mode(tmp_path, capsys):
+    src = "x = 1  # zenlint: ignore[ZL001] -- long-gone finding\n"
+    f = tmp_path / "stale.py"
+    f.write_text(src)
+    assert zenlint_main([str(f)]) == 0
+    capsys.readouterr()
+    assert zenlint_main(["--strict-suppressions", str(f)]) == 1
+    out = capsys.readouterr().out
+    assert "stale suppression of [ZL001]" in out
+    assert ENGINE_RULE in out
+
+
+def test_live_suppression_passes_strict_mode(tmp_path):
+    f = tmp_path / "live.py"
+    f.write_text(VIOLATION.format("  # zenlint: ignore[ZL001] -- why"))
+    assert zenlint_main(["--strict-suppressions", str(f)]) == 0
+
+
+def test_strict_mode_respects_rule_filter(tmp_path):
+    """A --rule-filtered run must not call another rule's directive
+    stale: that rule never got a chance to consume it."""
+    f = tmp_path / "other.py"
+    f.write_text(VIOLATION.format("  # zenlint: ignore[ZL001] -- why"))
+    assert zenlint_main(["--strict-suppressions", "--rule", "ZL004",
+                         str(f)]) == 0

@@ -1,0 +1,121 @@
+"""Interprocedural fixtures: ZL001/ZL005 must follow ids and receipts
+through locally defined helpers.
+
+Each violating caller here was INVISIBLE to the per-function pass (the
+helper's body is legal in isolation; the caller never names a sink) --
+these pin the module-summary upgrade.  The correct idioms pin its
+restraint: internal translation, internal consumption, dict custody,
+and ambiguous names must not be flagged.
+"""
+
+
+class FixtureRunner:
+
+    # -- helpers (legal in isolation) ---------------------------------------
+
+    def _free_pages(self, pool, ids):
+        """Forwards ids straight to a physical sink."""
+        pool._give(ids)
+
+    def _push(self, pool, ids):
+        pool._give(ids)
+
+    def _relay(self, pool, ids):
+        """Chain: sink is two hops away (needs the fixpoint)."""
+        self._push(pool, ids)
+
+    def _ident(self, ids):
+        """Pass-through: the return carries the argument's taint."""
+        return ids
+
+    def _translated(self, pool, req):
+        """Fixed return taint: always physical."""
+        return pool.to_physical(req.pages)
+
+    def _park_all(self, pool, req):
+        """Pure receipt relay: the caller owns the reclaim receipt."""
+        return pool.reclaim(req)
+
+    def _park_outer(self, pool, req):
+        """Relay of a relay (needs the fixpoint)."""
+        return self._park_all(pool, req)
+
+    # -- ZL001 violations across the helper boundary ------------------------
+
+    def free_view_ids_via_helper(self, pool, req):
+        self._free_pages(pool, req.pages)  # EXPECT[ZL001]
+
+    def free_view_ids_via_chain(self, pool, req):
+        self._relay(pool, req.local_pages)  # EXPECT[ZL001]
+
+    def free_passthrough_result(self, pool, req):
+        pool._give(self._ident(req.pages))  # EXPECT[ZL001]
+
+    def store_phys_return_on_request(self, pool, req):
+        req.pages = self._translated(pool, req)  # EXPECT[ZL001]
+
+    def double_translate_helper_result(self, pool, req):
+        return pool.to_physical(self._translated(pool, req))  # EXPECT[ZL001]
+
+    # -- ZL005 violations across the helper boundary ------------------------
+
+    def preempt_discards_relayed_receipt(self, pool, victim):
+        self._park_all(pool, victim)  # EXPECT[ZL005]
+
+    def preempt_discards_chained_receipt(self, pool, victim):
+        self._park_outer(pool, victim)  # EXPECT[ZL005]
+
+    def relayed_receipt_never_consumed(self, pool, victim):
+        ids = self._park_all(pool, victim)  # EXPECT[ZL005]
+        self.count += 1
+
+    # -- correct idioms (must NOT be flagged) -------------------------------
+
+    def free_translated_ids_via_helper(self, pool, req):
+        self._free_pages(pool, pool.to_physical(req.pages))
+
+    def helper_translates_internally(self, pool, req):
+        # _free_safely's body converts before sinking, so view ids are
+        # the correct currency at this call site
+        self._free_safely(pool, req.pages)
+
+    def _free_safely(self, pool, ids):
+        pool._give(pool.to_physical(ids))
+
+    def relayed_receipt_consumed(self, pool, victim):
+        ids = self._park_all(pool, victim)
+        self.snapshot(ids)
+        return ids
+
+    def _detach(self, cache, nodes):
+        # consumes its own receipt (folds into stats): the return value
+        # is informational, so callers may ignore it
+        released = cache.unpin(nodes)
+        self.count += released
+        return released
+
+    def detach_ignoring_count(self, cache, req):
+        self._detach(cache, req.prefix_nodes)
+
+    def _park_info(self, pool, req):
+        # keeps custody: the receipt travels inside a dict this helper's
+        # caller receives whole
+        ids = pool.reclaim(req)
+        return {"req": req.req_id, "ids": ids}
+
+
+class OtherRunner:
+    """A second def of ``_mixed`` makes the name ambiguous module-wide:
+    no summary may be built for it, so neither caller is flagged."""
+
+    def _mixed(self, pool, ids):
+        pool._give(ids)
+
+
+class ThirdRunner:
+
+    def _mixed(self, pool, ids):
+        self.log(ids)
+
+    def call_ambiguous_helper(self, pool, req):
+        self._mixed(pool, req.pages)
