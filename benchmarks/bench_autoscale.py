@@ -35,7 +35,8 @@ try:
 except ImportError:  # run as a script: benchmarks/ is sys.path[0]
     from common import emit_json, row
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.runtime import (Application, Cluster, JaxExecutor,
+                           NullExecutor, ServeOptions)
 from repro.serving.kv_cache import Request
 
 APPS = ("hot", "warm", "cold")
@@ -71,8 +72,9 @@ def run_arm(autoscale: bool, *, ticks: int, phase_len: int,
     handles = {}
     for name in APPS:
         handles[name] = cluster.submit(Application.serve(
-            "tinyllama-1.1b", reduced=True, name=name, max_batch=8,
-            quota_pages=pool_pages // len(APPS)))
+            "tinyllama-1.1b", reduced=True, name=name,
+            serve=ServeOptions(max_batch=8,
+                               quota_pages=pool_pages // len(APPS))))
     rng = np.random.default_rng(0)
     rid = itertools.count()
     integ = {"quota_pages": 0.0, "used_pages": 0.0, "demand_bytes": 0.0}
@@ -152,8 +154,9 @@ def bench_park_warm_restart(smoke: bool):
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
     h = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name="park-demo", max_batch=4,
-        pool_pages=32, cache_len=512, backend="paged"))
+        "tinyllama-1.1b", reduced=True, name="park-demo",
+        serve=ServeOptions(max_batch=4, pool_pages=32, cache_len=512,
+                           backend="paged")))
     n = 2 if smoke else 4
     for i in range(n):
         h.submit_request(Request(f"r{i}", 200, 24))

@@ -69,7 +69,8 @@ if __name__ == "__main__":
     apply_host_settings(reexec=True)
 from repro import obs
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.runtime import (Application, Cluster, JaxExecutor,
+                           NullExecutor, ServeOptions)
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
 
@@ -201,8 +202,10 @@ def run_tenancy(shared: bool, n_per_app: int = 32, pool_pages: int = 192,
     for cls, (prompt, gen) in CLASSES.items():
         app = Application.serve(
             "tinyllama-1.1b", reduced=True, name=f"app-{cls}",
-            max_batch=8, private_pool=not shared,
-            pool_pages=pool_pages if shared else pool_pages // len(CLASSES))
+            serve=ServeOptions(
+                max_batch=8, private_pool=not shared,
+                pool_pages=(pool_pages if shared
+                            else pool_pages // len(CLASSES))))
         h = cluster.submit(app)
         for i in range(n_per_app):
             p = int(prompt * rng.uniform(0.6, 1.4))
@@ -240,8 +243,9 @@ def run_swa(rings: bool, *, n: int = 4, prompt: int = 96, gen: int = 280,
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=pool_pages)
     h = cluster.submit(Application.serve(
-        "gemma3-12b", reduced=True, name="swa-tenant", max_batch=4,
-        backend="paged", swa_rings=rings, policy="fixed"))
+        "gemma3-12b", reduced=True, name="swa-tenant",
+        serve=ServeOptions(max_batch=4, backend="paged", swa_rings=rings,
+                           policy="fixed")))
     for i in range(n):
         h.submit_request(Request(f"swa-r{i}", prompt, gen))
     pool = h.engine.pool
@@ -272,8 +276,9 @@ def run_alias(alias: bool, *, n_tenants: int = 4, n_req: int = 2,
     handles, reqs = [], []
     for t in range(n_tenants):
         h = cluster.submit(Application.serve(
-            "tinyllama-1.1b", reduced=True, name=f"alias-t{t}", max_batch=4,
-            backend="paged", policy="fixed", alias_kv=alias))
+            "tinyllama-1.1b", reduced=True, name=f"alias-t{t}",
+            serve=ServeOptions(max_batch=4, backend="paged",
+                               policy="fixed", alias_kv=alias)))
         for i in range(n_req):
             r = Request(f"t{t}-r{i}", prompt, gen)
             h.submit_request(r)
@@ -298,6 +303,52 @@ def run_alias(alias: bool, *, n_tenants: int = 4, n_req: int = 2,
     for h in handles:
         h.release()
     return live_bytes, len(stores), tokens, stats, wall
+
+
+def run_router(replicas: int, *, n: int = 12, prompt: int = 64, gen: int = 8,
+               pool_pages: int = 96, max_steps: int = 20_000):
+    """fig_router: one paged tenant serving a fixed closed-loop request
+    set through the front-end router, 1 vs N engine replicas.
+
+    The replicas share the pod pool and ONE device KV array set, so the
+    scheduling-level speedup is measured in ROUTER ROUNDS (each round
+    dispatches + steps every replica): tokens per round must scale with
+    the replica count, and per-request TTFT in rounds must not get
+    worse.  Wall time is reported but never gated -- on a single host
+    the replica steps serialize, which is exactly why the honest metric
+    here is rounds, the simulation's logical clock."""
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=JaxExecutor(seed=0), pool_pages=pool_pages)
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name=f"router-x{replicas}",
+        serve=ServeOptions(max_batch=2, backend="paged", policy="fixed",
+                           replicas=replicas, pool_pages=pool_pages,
+                           cache_len=512)))
+    rng = np.random.default_rng(3)
+    reqs = [Request(f"rt-r{i}", int(prompt * rng.uniform(0.7, 1.3)), gen)
+            for i in range(n)]
+    for r in reqs:
+        h.submit_request(r)
+    pending = {r.req_id: r for r in reqs}
+    ttft_rounds, rounds = {}, 0
+    t0 = time.perf_counter()
+    while h.step()["alive"] and rounds < max_steps:
+        rounds += 1
+        for rid, r in list(pending.items()):
+            if r.output_tokens:
+                ttft_rounds[rid] = rounds
+                del pending[rid]
+    wall = (time.perf_counter() - t0) * 1e6
+    stats = h.serving_stats()
+    tokens = {r.req_id: tuple(r.output_tokens) for r in reqs
+              if r.output_tokens is not None}
+    h.release()
+    return wall, rounds, ttft_rounds, stats, tokens
+
+
+def _p95(values):
+    vals = sorted(values)
+    return vals[int(0.95 * (len(vals) - 1))] if vals else 0.0
 
 
 def _prefix_requests(n: int, overlap: float, prompt: int, gen: int,
@@ -334,9 +385,12 @@ def run_prefix(arm: str, *, n: int = 8, overlap: float = 0.8,
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=pool_pages)
     h = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name=f"prefix-{arm}", max_batch=4,
-        backend="dense" if arm == "dense" else "paged", policy="fixed",
-        cache_len=1024, prefix_cache=arm == "cached"))
+        "tinyllama-1.1b", reduced=True, name=f"prefix-{arm}",
+        serve=ServeOptions(
+            max_batch=4,
+            backend="dense" if arm == "dense" else "paged",
+            policy="fixed", cache_len=1024,
+            prefix_cache=arm == "cached")))
     reqs = _prefix_requests(n, overlap, prompt, gen)
 
     def drive():
@@ -470,6 +524,37 @@ def main() -> None:
         f"ttft_speedup={ttft['nocache'] / max(ttft['cached'], 1e-9):.2f}")
     emit_json("serving_prefix",
               extra={"smoke": args.smoke, "n": n_px, "overlap": overlap},
+              rows_from=mark)
+
+    # Part 5b: replica-scaled data plane -- 1 vs 3 engine replicas behind
+    # the front-end router, same closed-loop request set, tokens-per-
+    # router-round throughput at token parity (BENCH_serving_router.json)
+    mark = rows_mark()
+    n_rt = 8 if args.smoke else 16
+    gen_rt = 8 if args.smoke else 16
+    res_rt = {}
+    for nrep in (1, 3):
+        wall, rounds, ttfts, stats, toks = run_router(
+            nrep, n=n_rt, gen=gen_rt)
+        res_rt[nrep] = (rounds, ttfts, stats, toks)
+        rstats = stats.get("router", {})
+        row(f"fig_router/x{nrep}", wall,
+            f"completed={stats['completed']};rounds={rounds};"
+            f"tokens_per_round="
+            f"{stats['tokens_generated'] / max(rounds, 1):.2f};"
+            f"ttft_ticks_p95={_p95(ttfts.values()):.0f};"
+            f"dispatched={rstats.get('dispatched', 0)}")
+    thr = {nrep: res_rt[nrep][2]["tokens_generated"]
+           / max(res_rt[nrep][0], 1) for nrep in res_rt}
+    p95_1, p95_3 = (_p95(res_rt[1][1].values()),
+                    _p95(res_rt[3][1].values()))
+    parity = int(res_rt[1][3] == res_rt[3][3] and len(res_rt[1][3]) > 0)
+    row("fig_router/scaling", 0.0,
+        f"router_speedup={thr[3] / max(thr[1], 1e-9):.2f};"
+        f"token_parity={parity};"
+        f"ttft_p95_ok={int(p95_3 <= p95_1)}")
+    emit_json("serving_router",
+              extra={"smoke": args.smoke, "n": n_rt, "gen": gen_rt},
               rows_from=mark)
 
     # Part 6: observability overhead -- tracer+metrics off vs on over the

@@ -42,7 +42,8 @@ DEFAULT_CURRENT = os.environ.get("BENCH_ARTIFACT_DIR", "artifacts/bench")
 #: rel_tol is the allowed fractional move in the WORSE direction;
 #: abs_slack is added on top (|delta| <= base*rel_tol + abs_slack passes).
 EXACT = ("completed", "token_parity", "tokens_match", "finished",
-         "restored", "kv_stores", "lifecycle_ok", "zensan_active")
+         "restored", "kv_stores", "lifecycle_ok", "zensan_active",
+         "ttft_p95_ok")
 
 
 def rule_for(metric: str):
@@ -75,6 +76,11 @@ def rule_for(metric: str):
         return ("higher_worse", 1.0, 0.25)
     if metric == "kv_bytes_ratio":
         return ("lower_worse", 0.25, 0.0)
+    if metric == "router_speedup":
+        # tokens-per-router-round, 3 replicas vs 1: deterministic at
+        # smoke scale (logical clock, not wall time) but allow the same
+        # drift budget as the other ratio gates
+        return ("lower_worse", 0.25, 0.10)
     if metric == "prefix_hit_rate":
         return ("lower_worse", 0.25, 0.05)
     if metric.endswith("_frac") or "saved" in metric:

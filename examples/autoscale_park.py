@@ -14,7 +14,7 @@ Run:  PYTHONPATH=src python examples/autoscale_park.py
 import numpy as np
 
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor
+from repro.runtime import Application, Cluster, JaxExecutor, ServeOptions
 from repro.serving.kv_cache import Request
 
 
@@ -23,8 +23,9 @@ def main():
                       executor=JaxExecutor(seed=0))
     cluster.enable_autoscale(idle_park_s=2.0, confirm_ticks=1)
     handle = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name="parkable", max_batch=4,
-        pool_pages=32, cache_len=512, backend="paged"))
+        "tinyllama-1.1b", reduced=True, name="parkable",
+        serve=ServeOptions(max_batch=4, pool_pages=32, cache_len=512,
+                           backend="paged")))
 
     rng = np.random.default_rng(0)
     for i in range(3):                       # burst 1

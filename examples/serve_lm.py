@@ -16,7 +16,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor
+from repro.runtime import Application, Cluster, JaxExecutor, ServeOptions
 from repro.serving.kv_cache import Request
 
 
@@ -35,8 +35,10 @@ def main():
         d_ff=256, vocab_size=512)
     app = Application.serve(
         cfg, shape=ShapeConfig("serve-demo", "decode", 64, args.max_batch),
-        name="serve-lm", max_batch=args.max_batch, pool_pages=128,
-        cache_len=256, policy="history", backend=args.backend)
+        name="serve-lm",
+        serve=ServeOptions(max_batch=args.max_batch, pool_pages=128,
+                           cache_len=256, policy="history",
+                           backend=args.backend))
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor())
     handle = cluster.submit(app)

@@ -14,22 +14,30 @@ Typical use::
 
     cluster = Cluster(pods=1, executor=JaxExecutor())
     cluster.enable_autoscale(idle_park_s=30.0)
-    handle = cluster.submit(Application.serve(..., quota_pages=32))
+    handle = cluster.submit(Application.serve(
+        ..., serve=ServeOptions(quota_pages=32)))
     ...
     cluster.tick()          # one reconcile round (call from your loop)
+
+An app that attaches a ``ScalePolicy`` to its ``ServeOptions`` also
+gets replica-count and batch-width scaling (``ReplicaScaler``,
+``BatchScaler``) and predictive unparking (``PredictiveUnparker``).
 """
 
 from repro.autoscale.controller import AppRecord, AutoscaleController
 from repro.autoscale.metrics import MetricsWindow, stats_delta
 from repro.autoscale.parking import (ParkedApp, ParkedRequest, park_app,
                                      unpark_app)
-from repro.autoscale.policy import (AppPolicy, Decision, IdleParker,
-                                    QuotaRebalancer, TargetTracking,
-                                    default_policies, sizing_step_bytes)
+from repro.autoscale.policy import (AppPolicy, BatchScaler, Decision,
+                                    IdleParker, PredictiveUnparker,
+                                    QuotaRebalancer, ReplicaScaler,
+                                    TargetTracking, default_policies,
+                                    sizing_step_bytes)
 
 __all__ = [
-    "AppPolicy", "AppRecord", "AutoscaleController", "Decision",
-    "IdleParker", "MetricsWindow", "ParkedApp", "ParkedRequest",
-    "QuotaRebalancer", "TargetTracking", "default_policies", "park_app",
+    "AppPolicy", "AppRecord", "AutoscaleController", "BatchScaler",
+    "Decision", "IdleParker", "MetricsWindow", "ParkedApp",
+    "ParkedRequest", "PredictiveUnparker", "QuotaRebalancer",
+    "ReplicaScaler", "TargetTracking", "default_policies", "park_app",
     "sizing_step_bytes", "stats_delta", "unpark_app",
 ]

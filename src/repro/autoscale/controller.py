@@ -32,6 +32,7 @@ benchmark drive the loop on a logical clock.
 
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -86,11 +87,26 @@ class AutoscaleController:
         here: their growth path is compile-feedback escalation)."""
         if handle.app.kind != "serve":
             return None
+        if policies is None:
+            policies = self._call_make_policies(handle)
         rec = AppRecord(handle, MetricsWindow(alpha=self.window_alpha),
-                        policies if policies is not None
-                        else self._make_policies())
+                        policies)
         self.apps[handle.job.job_id] = rec
         return rec
+
+    def _call_make_policies(self, handle) -> List[AppPolicy]:
+        """``make_policies`` may be per-app (takes the handle -- the
+        default chain reads the app's ScalePolicy) or global (zero-arg,
+        the pre-replica contract many callers still use)."""
+        mk = self._make_policies
+        try:
+            sig = inspect.signature(mk)
+            takes_handle = any(
+                p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+                for p in sig.parameters.values())
+        except (TypeError, ValueError):   # builtins, odd callables
+            takes_handle = False
+        return mk(handle) if takes_handle else mk()
 
     def detach(self, handle) -> None:
         self.apps.pop(handle.job.job_id, None)
@@ -112,13 +128,12 @@ class AutoscaleController:
             if not stats:
                 continue                 # engine not bound yet
             rec.window.observe(stats, now)
-            if h.parked:
-                # a parked app has nothing to decide: unparking is
-                # demand-driven (submit_request), and letting scale
-                # policies act on decaying pre-park signals would
-                # consume the park reservation behind its back
-                rec.streak.clear()
-                continue
+            # a parked app has almost nothing to decide: unparking is
+            # demand-driven (submit_request), and letting scale policies
+            # act on decaying pre-park signals would consume the park
+            # reservation behind its back.  Only policies that opt in
+            # via ``acts_on_parked`` (the predictive unparker) are
+            # consulted -- _decide_and_apply filters the rest out.
             act = self._decide_and_apply(rec, now)
             if act is not None:
                 actions.append(act)
@@ -130,7 +145,10 @@ class AutoscaleController:
     def _decide_and_apply(self, rec: AppRecord, now: float
                           ) -> Optional[Dict]:
         decision = Decision()
+        parked = getattr(rec.handle, "parked", False)
         for pol in rec.policies:
+            if parked and not getattr(pol, "acts_on_parked", False):
+                continue
             decision = pol.decide(rec.window, rec.handle)
             if decision.is_action:
                 break
@@ -166,6 +184,40 @@ class AutoscaleController:
                 return None
             entry.update(h.park())
             rec.streak.clear()
+            return entry
+        if d.action == "unpark":
+            if not h.parked:
+                return None
+            entry.update(h.unpark())
+            rec.streak.clear()
+            rec.last_up_t = now          # an unpark IS a scale-up event
+            return entry
+        if d.action == "add_replica":
+            if now - rec.last_up_t < self.cooldown_up_s:
+                return None
+            h.add_replica()
+            rec.last_up_t = now
+            entry.update(num_replicas=h.num_replicas)
+            return entry
+        if d.action == "remove_replica":
+            if now - rec.last_down_t < self.cooldown_down_s:
+                return None
+            receipt = h.remove_replica()
+            rec.last_down_t = now
+            entry.update(num_replicas=h.num_replicas, **receipt)
+            return entry
+        if d.action in ("grow_batch", "shrink_batch"):
+            grow = d.action == "grow_batch"
+            last = rec.last_up_t if grow else rec.last_down_t
+            cool = self.cooldown_up_s if grow else self.cooldown_down_s
+            if now - last < cool:
+                return None
+            applied = h.set_max_batch(d.amount)
+            if grow:
+                rec.last_up_t = now
+            else:
+                rec.last_down_t = now
+            entry.update(max_batch=applied)
             return entry
         if d.action == "scale_up":
             if now - rec.last_up_t < self.cooldown_up_s:

@@ -32,6 +32,12 @@ ENGINE_COUNTERS = EngineStats.COUNTERS
 POOL_COUNTERS = ("grants", "grant_pages", "denials", "scaleups", "released",
                  "prefix_unpinned", "prefix_evictions")
 
+#: monotonic counters inside the ``router`` sub-dict
+#: (RequestRouter.stats); the rest are gauges (queue_len, num_replicas,
+#: max_batch)
+ROUTER_COUNTERS = ("submitted", "dispatched", "replicas_added",
+                   "replicas_removed")
+
 
 def stats_delta(cur: Dict, since: Dict) -> Dict:
     """Windowed view of a ``serving_stats()`` dict: counters accumulated
@@ -73,6 +79,26 @@ def stats_delta(cur: Dict, since: Dict) -> Dict:
             sp[key] = {a: max(n - prev.get(a, 0), 0)
                        for a, n in sp.get(key, {}).items()}
         out["shared_pool"] = sp
+    if isinstance(cur.get("router"), dict):
+        srt = since.get("router", {})
+        if not isinstance(srt, dict):
+            srt = {}
+        out["router"] = {k: max(v - srt.get(k, 0), 0)
+                         if k in ROUTER_COUNTERS else v
+                         for k, v in cur["router"].items()}
+    if isinstance(cur.get("replicas"), list):
+        # per-replica breakdowns window by view name: replica indices
+        # are reused across scale-down/up but each incarnation gets a
+        # fresh pool view, so a missing/new view correctly deltas
+        # against zero
+        sreps = since.get("replicas")
+        prev = ({e.get("view"): e for e in sreps if isinstance(e, dict)}
+                if isinstance(sreps, list) else {})
+        out["replicas"] = [
+            {k: max(v - prev.get(e.get("view"), {}).get(k, 0), 0)
+             if k in ENGINE_COUNTERS else v
+             for k, v in e.items()}
+            for e in cur["replicas"]]
     if isinstance(cur.get("hist"), dict):
         shist = since.get("hist", {})
         if not isinstance(shist, dict):
@@ -98,6 +124,9 @@ class MetricsWindow:
         self.rates: Dict[str, float] = {}   # EWMA-smoothed signals
         self.now: Optional[float] = None
         self.last_active_t: Optional[float] = None
+        #: last observation that carried new arrivals (router submissions
+        #: or engine admissions) -- the predictive unparker's anchor
+        self.last_arrival_t: Optional[float] = None
         self._raw: Optional[Dict] = None
         self._t: Optional[float] = None
 
@@ -131,13 +160,31 @@ class MetricsWindow:
         self._smooth("denials_per_s", pool.get("denials", 0) / dt)
         self._smooth("tokens_per_s", d.get("tokens_generated", 0) / dt)
         self._smooth("admitted_per_s", d.get("admitted", 0) / dt)
+        # arrival forecasting: front-end submissions when the app serves
+        # through a router (admissions lag the router queue), else engine
+        # admissions.  The smoothed inter-arrival gap is the predictive
+        # unparker's periodicity estimate.
+        router = d.get("router") if isinstance(d.get("router"), dict) else None
+        arrivals = (router.get("submitted", 0) if router is not None
+                    else d.get("admitted", 0))
+        if arrivals > 0:
+            if self.last_arrival_t is not None:
+                self._smooth("arrival_gap_s",
+                             (now - self.last_arrival_t) / arrivals)
+            self.last_arrival_t = now
+        self._smooth("submitted_per_s", arrivals / dt)
         # gauges: tracked un-smoothed (the current truth matters)
         for g in ("queue_len", "num_running", "pool_utilization",
                   "pool_used_pages", "pool_quota_pages"):
             if g in d:
                 self.rates[g] = d[g]
+        if router is not None:
+            self.rates["num_replicas"] = router.get("num_replicas", 1)
+            self.rates["max_batch"] = router.get("max_batch", 0)
+            self.rates["router_queue_len"] = router.get("queue_len", 0)
 
-        active = (d.get("admitted", 0) > 0 or d.get("prefills", 0) > 0
+        active = (arrivals > 0
+                  or d.get("admitted", 0) > 0 or d.get("prefills", 0) > 0
                   or d.get("decode_steps", 0) > 0
                   or d.get("queue_len", 0) > 0
                   or d.get("num_running", 0) > 0)

@@ -75,6 +75,12 @@ def park_app(handle) -> Dict:
     if eng is None or handle.state != "running":
         raise RuntimeError(f"{handle.app.name}: park needs a bound, "
                            f"running application (state={handle.state})")
+    migrated = None
+    rset = handle.exec_state.get("replicas")
+    if rset is not None and len(rset.replicas) > 1:
+        # park IS scale-to-zero: fold the extra replicas into the primary
+        # first (token-identical migration), then drain the primary below
+        migrated = rset.scale_to(1)
     drained = eng.drain()
     runner = handle.runner
     runner_state = runner.park(drained) if runner is not None else None
@@ -96,6 +102,8 @@ def park_app(handle) -> Dict:
                "drained_requests": len(drained),
                "kv_arrays_dropped": bool((runner_state or {}).get(
                    "arrays_dropped", runner_state is not None))}
+    if migrated is not None:
+        receipt["migrated_requests"] = migrated.get("migrated_requests", 0)
     s = zensan.SAN
     if s is not None:
         # quiescent point: every drained page must be back on the free

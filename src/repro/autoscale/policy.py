@@ -16,6 +16,22 @@ cooldowns) and the handle owns *how* (``scale_up``/``scale_down``/
 * :class:`QuotaRebalancer` -- pod-level: resizes co-tenant ``PoolView``
   quotas on one shared pool in proportion to windowed demand, so the
   *provisioned* KV footprint tracks load instead of peak.
+
+An application that opts into replica/batch scaling (a
+:class:`~repro.runtime.options.ScalePolicy` on its ``ServeOptions``)
+gets three more, all target-tracking on windowed signals:
+
+* :class:`ReplicaScaler` -- replica count follows queue depth per
+  replica (scale out) and decode occupancy (scale in; the removed
+  replica's requests migrate token-identically).
+* :class:`BatchScaler` -- the continuous-batch admission width follows
+  decode occupancy, doubling/halving between ``batch_min`` and
+  ``batch_max`` (the runners compile to ``batch_max`` up front, so no
+  retrace).
+* :class:`PredictiveUnparker` -- the one policy that acts on a *parked*
+  app: unpark ``unpark_lead_s`` ahead of the EWMA-forecast next
+  arrival, so a periodic tenant's first request of the burst lands on a
+  live engine instead of paying the warm-restart latency.
 """
 
 from __future__ import annotations
@@ -35,9 +51,12 @@ DEFAULT_STEP_BYTES = 64 << 20
 class Decision:
     """One policy's verdict for one application this tick."""
 
-    action: str = "none"        # none | scale_up | scale_down | park
+    # none | scale_up | scale_down | park | unpark
+    # | add_replica | remove_replica | grow_batch | shrink_batch
+    action: str = "none"
     amount_bytes: int = 0       # for scale_up / scale_down
     reason: str = ""
+    amount: int = 0             # for grow_batch / shrink_batch (new width)
 
     @property
     def is_action(self) -> bool:
@@ -59,6 +78,11 @@ def sizing_step_bytes(handle) -> int:
 
 class AppPolicy:
     """Per-application policy interface."""
+
+    #: a parked app normally has nothing to decide (unparking is
+    #: demand-driven); only policies that opt in here are consulted
+    #: while the app is parked (see PredictiveUnparker)
+    acts_on_parked = False
 
     def decide(self, window: MetricsWindow, handle) -> Decision:
         raise NotImplementedError
@@ -146,6 +170,122 @@ class IdleParker(AppPolicy):
         return NONE
 
 
+def _decode_occupancy(w: MetricsWindow, handle) -> Optional[float]:
+    """Running requests / total decode slots (replicas x batch width),
+    from the window's gauges.  None until the window has observed."""
+    rset = getattr(handle, "replica_set", None)
+    if rset is None:
+        return None
+    running = w.rates.get("num_running")
+    if running is None:
+        return None
+    slots = len(rset.replicas) * max(rset.max_batch, 1)
+    return float(running) / max(slots, 1)
+
+
+class ReplicaScaler(AppPolicy):
+    """Target-track windowed queue depth per replica (out) and decode
+    occupancy (in), inside ``[max(min_replicas, 1), max_replicas]``.
+    Scale-to-zero is NOT this policy's job: the IdleParker parks the
+    whole app (min_replicas=0 merely permits it)."""
+
+    def __init__(self, scale):
+        self.scale = scale
+
+    def decide(self, w: MetricsWindow, handle) -> Decision:
+        rset = getattr(handle, "replica_set", None)
+        if rset is None or getattr(handle, "parked", False):
+            return NONE
+        n = len(rset.replicas)
+        qlen = w.rates.get("queue_len")
+        if qlen is None:
+            return NONE                  # no window observed yet
+        per_replica = float(qlen) / max(n, 1)
+        if (n < self.scale.max_replicas
+                and per_replica > self.scale.target_queue_per_replica):
+            return Decision(
+                "add_replica",
+                reason=f"queue/replica {per_replica:.1f} > "
+                       f"{self.scale.target_queue_per_replica:.1f}")
+        occ = _decode_occupancy(w, handle)
+        if (n > max(self.scale.min_replicas, 1) and qlen == 0
+                and occ is not None and occ < self.scale.shrink_occupancy):
+            return Decision(
+                "remove_replica",
+                reason=f"occupancy {occ:.2f} < "
+                       f"{self.scale.shrink_occupancy:.2f} across {n} "
+                       "replicas")
+        return NONE
+
+
+class BatchScaler(AppPolicy):
+    """Target-track decode occupancy with the continuous-batch width,
+    doubling / halving inside ``[batch_min, batch_max]``.  The runners
+    were compiled for ``batch_max`` up front (see
+    ``JaxExecutor.build_replica``), so growing the width never
+    retraces -- it only admits more."""
+
+    def __init__(self, scale):
+        self.scale = scale
+
+    def decide(self, w: MetricsWindow, handle) -> Decision:
+        rset = getattr(handle, "replica_set", None)
+        if (rset is None or getattr(handle, "parked", False)
+                or self.scale.batch_max is None):
+            return NONE
+        mb = rset.max_batch
+        occ = _decode_occupancy(w, handle)
+        if occ is None:
+            return NONE
+        qlen = w.rates.get("queue_len", 0)
+        if (occ >= self.scale.grow_occupancy and qlen > 0
+                and mb < self.scale.batch_max):
+            return Decision(
+                "grow_batch", reason=f"occupancy {occ:.2f} >= "
+                f"{self.scale.grow_occupancy:.2f} with queue {qlen:.0f}",
+                amount=min(mb * 2, self.scale.batch_max))
+        if (occ <= self.scale.shrink_occupancy and mb > self.scale.batch_min
+                and w.window.get("decode_steps", 0) > 0):
+            return Decision(
+                "shrink_batch", reason=f"occupancy {occ:.2f} <= "
+                f"{self.scale.shrink_occupancy:.2f}",
+                amount=max(mb // 2, self.scale.batch_min))
+        return NONE
+
+
+class PredictiveUnparker(AppPolicy):
+    """Unpark ahead of the EWMA-forecast next arrival.
+
+    The window tracks the smoothed gap between arrival-bearing
+    observations (``arrival_gap_s``); when ``now + lead_s`` reaches the
+    forecast next arrival -- and the forecast is not already stale by
+    more than ``horizon`` gaps -- the parked app is warm-restarted so
+    the burst's first request finds a live engine.  Purely an
+    optimization: a wrong forecast costs one park/unpark cycle, never
+    correctness (unparking stays demand-driven regardless)."""
+
+    acts_on_parked = True
+
+    def __init__(self, lead_s: float = 1.0, horizon: float = 1.5):
+        self.lead_s = float(lead_s)
+        self.horizon = float(horizon)
+
+    def decide(self, w: MetricsWindow, handle) -> Decision:
+        if not getattr(handle, "parked", False):
+            return NONE
+        gap = w.rates.get("arrival_gap_s")
+        last = w.last_arrival_t
+        if gap is None or gap <= 0 or last is None or w.now is None:
+            return NONE
+        due = last + gap
+        if (w.now + self.lead_s >= due
+                and w.now <= last + self.horizon * gap):
+            return Decision(
+                "unpark", reason=f"forecast arrival in "
+                f"{max(due - w.now, 0.0):.2f}s (gap EWMA {gap:.2f}s)")
+        return NONE
+
+
 class QuotaRebalancer:
     """Demand-weighted fair-share quota resize across one pod's tenants.
 
@@ -228,12 +368,27 @@ class QuotaRebalancer:
 
 def default_policies(*, ttft_target_s: Optional[float] = None,
                      denial_target_per_s: float = 0.5,
-                     idle_park_s: float = 60.0) -> List[AppPolicy]:
+                     idle_park_s: float = 60.0,
+                     scale=None) -> List[AppPolicy]:
     """The stock per-app policy chain.  The parker runs FIRST: the
     controller stops at the first active decision, and a large app can
     emit shrink decisions for many ticks (one sizing step each) -- an
     app that has crossed the idle threshold must park immediately, not
-    after its bytes have been ground down to the floor."""
-    return [IdleParker(idle_s=idle_park_s),
-            TargetTracking(ttft_target_s=ttft_target_s,
-                           denial_target_per_s=denial_target_per_s)]
+    after its bytes have been ground down to the floor.
+
+    ``scale`` (a :class:`~repro.runtime.options.ScalePolicy`) appends
+    the replica/batch scalers and predictive unparker after the parker
+    but before byte-level target tracking: replica and width moves are
+    cheaper and more reversible than byte grants, so they get first
+    refusal on a pressure signal."""
+    pols: List[AppPolicy] = [IdleParker(idle_s=idle_park_s)]
+    if scale is not None:
+        if scale.predictive_unpark:
+            pols.append(PredictiveUnparker(lead_s=scale.unpark_lead_s))
+        if scale.scales_replicas:
+            pols.append(ReplicaScaler(scale))
+        if scale.scales_batch:
+            pols.append(BatchScaler(scale))
+    pols.append(TargetTracking(ttft_target_s=ttft_target_s,
+                               denial_target_per_s=denial_target_per_s))
+    return pols

@@ -18,6 +18,7 @@ from repro.core import profiles as prof
 from repro.core.history import HistoryStore
 from repro.core.materializer import MESHES
 from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.runtime.options import ScalePolicy, ServeOptions
 from repro.serving.kv_cache import Request, pool_pages_for_budget
 
 
@@ -49,6 +50,18 @@ def main():
                          "cache -- repeated prompt prefixes reuse cached "
                          "KV pages and prefill computes only the suffix "
                          "(rejected on dense: no shareable page identity)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the front-end request "
+                         "router (replicas share the pod pool and, on "
+                         "the paged backend, one KV array set + params)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="let the autoscale control plane move the "
+                         "replica count up to this bound "
+                         "(target-tracking on windowed queue depth)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="stream Prometheus metrics on this port for "
+                         "the run's duration (0 = ephemeral; implies "
+                         "metrics recording)")
     ap.add_argument("--reduced", action="store_true",
                     help="real smoke-scale model via the JaxExecutor")
     ap.add_argument("--autoscale", action="store_true",
@@ -72,38 +85,54 @@ def main():
                  "has no page identity to share across requests")
 
     tracer = obs.enable() if args.trace else None
-    if args.metrics_dump:
+    if args.metrics_dump or args.metrics_port is not None:
         obs.enable_metrics()
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = obs.serve_metrics(port=args.metrics_port)
+        print(f"[metrics] http://127.0.0.1:{metrics_srv.port}/metrics")
 
     cfg = get_config(args.arch)
     mesh_spec = MESHES[args.mesh]
     history = HistoryStore("artifacts/history")
 
-    if args.reduced:
-        executor = JaxExecutor()
-        app = Application.serve(args.arch, reduced=True,
+    scale = None
+    if args.max_replicas is not None:
+        scale = ScalePolicy(min_replicas=1, max_replicas=args.max_replicas)
+    try:
+        if args.reduced:
+            executor = JaxExecutor()
+            opts = ServeOptions(backend=args.backend,
                                 max_batch=min(args.max_batch, 4),
                                 pool_pages=128, policy=args.policy,
-                                backend=args.backend,
+                                replicas=args.replicas,
                                 swa_rings=not args.no_swa_rings,
                                 alias_kv=not args.no_alias_kv,
                                 prefix_cache=args.prefix_cache,
-                                private_pool=args.private_pool)
-        prompt_rng = (8, 64)
-        max_new = 16
-    else:
-        # KV budget: HBM left after weights on the serving slice
-        kv_budget = int(mesh_spec.hbm_per_device * mesh_spec.num_devices * 0.6
-                        - prof.param_bytes(cfg))
-        pages = pool_pages_for_budget(max(kv_budget, 1 << 30),
-                                      cfg.num_layers, cfg.kv_dim)
-        executor = NullExecutor()
-        app = Application.serve(args.arch, shape="decode_32k",
-                                max_batch=args.max_batch, pool_pages=pages,
+                                private_pool=args.private_pool,
+                                scale=scale)
+            app = Application.serve(args.arch, reduced=True, serve=opts)
+            prompt_rng = (8, 64)
+            max_new = 16
+        else:
+            # KV budget: HBM left after weights on the serving slice
+            kv_budget = int(mesh_spec.hbm_per_device
+                            * mesh_spec.num_devices * 0.6
+                            - prof.param_bytes(cfg))
+            pages = pool_pages_for_budget(max(kv_budget, 1 << 30),
+                                          cfg.num_layers, cfg.kv_dim)
+            executor = NullExecutor()
+            opts = ServeOptions(max_batch=args.max_batch, pool_pages=pages,
                                 policy=args.policy,
-                                private_pool=args.private_pool)
-        prompt_rng = (64, 4096)
-        max_new = 256
+                                replicas=args.replicas,
+                                private_pool=args.private_pool,
+                                scale=scale)
+            app = Application.serve(args.arch, shape="decode_32k",
+                                    serve=opts)
+            prompt_rng = (64, 4096)
+            max_new = 256
+    except ValueError as e:              # typed-options cross-field rules
+        ap.error(str(e))
 
     cluster = Cluster(pods=1, mesh=mesh_spec, history=history,
                       executor=executor)
@@ -145,6 +174,12 @@ def main():
                                           int(rng.integers(16, max_new + 1))))
         stats = handle.run(max_steps=1_000_000)
     pool = handle.engine.pool
+    if args.replicas > 1 or args.max_replicas is not None:
+        rstats = handle.serving_stats().get("router", {})
+        print(f"[router] replicas={handle.num_replicas} "
+              f"dispatched={rstats.get('dispatched', 0)} "
+              f"added={rstats.get('replicas_added', 0)} "
+              f"removed={rstats.get('replicas_removed', 0)}")
     print(f"[done] completed={stats['completed']} "
           f"tokens={stats['tokens_generated']} "
           f"decode_steps={stats['decode_steps']} "
@@ -176,6 +211,9 @@ def main():
     if args.metrics_dump:
         print("[metrics]")
         print(obs.current_metrics().render(), end="")
+    if metrics_srv is not None:
+        metrics_srv.stop()
+    if args.metrics_dump or args.metrics_port is not None:
         obs.disable_metrics()
     handle.release()
     history.save()

@@ -9,7 +9,9 @@ Three pieces (see docs/observability.md):
   :class:`MetricsRegistry` with Prometheus text exposition;
 * :mod:`repro.obs.export` / :mod:`repro.obs.summary` -- Chrome
   trace-event JSON / JSONL exporters and the ``python -m repro.obs``
-  trace summarizer.
+  trace summarizer;
+* :mod:`repro.obs.http` -- a stdlib streaming ``/metrics`` listener
+  (Prometheus text exposition) for pull-based scraping.
 
 Everything is a no-op until :func:`enable` / :func:`enable_metrics` is
 called; instrumentation sites pay one module-attribute read + ``None``
@@ -27,4 +29,5 @@ from .metrics import (  # noqa: F401
 from .export import (  # noqa: F401
     load_events, to_chrome_events, write_chrome_trace, write_jsonl,
 )
+from .http import MetricsServer, serve_metrics  # noqa: F401
 from .summary import request_lifecycles, summarize  # noqa: F401

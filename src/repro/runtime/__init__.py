@@ -16,12 +16,14 @@ See docs/runtime.md for the full lifecycle.
 from repro.runtime.application import REDUCED_SHAPES, Application
 from repro.runtime.cluster import AppHandle, Cluster
 from repro.runtime.executors import Executor, JaxExecutor, NullExecutor
+from repro.runtime.options import ScalePolicy, ServeOptions
 from repro.runtime.simulate import measure_cluster_throughput, replay_trace
 
 __all__ = [
     "Application", "AppHandle", "Cluster",
     "Executor", "JaxExecutor", "NullExecutor",
-    "REDUCED_SHAPES", "measure_cluster_throughput", "replay_trace",
+    "REDUCED_SHAPES", "ScalePolicy", "ServeOptions",
+    "measure_cluster_throughput", "replay_trace",
 ]
 
 # the autoscale control plane lives in repro.autoscale (imported lazily

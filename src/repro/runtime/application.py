@@ -19,6 +19,7 @@ until a :class:`~repro.runtime.cluster.Cluster` accepts the submission.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Union
 
@@ -27,6 +28,7 @@ from repro.configs.reduced import reduced_config
 from repro.core import profiles as prof
 from repro.core.annotations import AppLimits, current_app_limits
 from repro.core.graph import ResourceGraph, build_resource_graph
+from repro.runtime.options import ServeOptions
 
 # CPU smoke-scale invocation classes (same code path, reduced size)
 REDUCED_SHAPES = {
@@ -53,6 +55,8 @@ class Application:
     demand_bytes: Optional[int] = None     # explicit footprint override
     demand_chips: int = 1
     options: Dict[str, Any] = field(default_factory=dict)
+    #: typed serve surface; ``options`` mirrors it for serve apps
+    serve_options: Optional[ServeOptions] = None
     _graph: Optional[ResourceGraph] = field(default=None, repr=False)
 
     # -- constructors -------------------------------------------------------
@@ -76,19 +80,36 @@ class Application:
               shape: Union[str, ShapeConfig] = "decode_32k",
               reduced: bool = False, name: Optional[str] = None,
               limits: Optional[AppLimits] = None,
+              serve: Optional[ServeOptions] = None,
               **options) -> "Application":
         cfg = _resolve_config(config)
         sh = SHAPES[shape] if isinstance(shape, str) else shape
         if reduced:
             cfg = reduced_config(cfg)
             sh = REDUCED_SHAPES["decode"]
+        if serve is not None and options:
+            raise TypeError(
+                "Application.serve: pass serve=ServeOptions(...) OR legacy "
+                f"keyword options, not both (got serve= plus "
+                f"{sorted(options)})")
+        if serve is None:
+            if options:
+                warnings.warn(
+                    "Application.serve(**options) keyword options are "
+                    "deprecated and will be removed next release; pass "
+                    "serve=ServeOptions(" +
+                    ", ".join(f"{k}=..." for k in sorted(options)) + ")",
+                    DeprecationWarning, stacklevel=2)
+            serve = ServeOptions.from_kwargs(options)
         return cls(name or f"{cfg.name}:serve", "serve",
-                   cfg, sh, limits or AppLimits(), reduced, options=options)
+                   cfg, sh, limits or AppLimits(), reduced,
+                   options=serve.asdict(), serve_options=serve)
 
     @classmethod
     def from_callable(cls, app_fn: Callable[[], ModelConfig], *,
                       kind: str = "train",
                       shape: Union[str, ShapeConfig] = "train_4k",
+                      serve: Optional[ServeOptions] = None,
                       **options) -> "Application":
         """Build from an annotated user 'source program'.
 
@@ -101,8 +122,14 @@ class Application:
         name = (comp or {}).get("name") or getattr(
             app_fn, "__name__", "user-app")
         sh = SHAPES[shape] if isinstance(shape, str) else shape
-        ctor = cls.train if kind == "train" else cls.serve
-        return ctor(cfg, shape=sh, name=name, limits=limits, **options)
+        if kind == "train":
+            if serve is not None:
+                raise TypeError("from_callable: serve=ServeOptions is only "
+                                "valid with kind='serve'")
+            return cls.train(cfg, shape=sh, name=name, limits=limits,
+                             **options)
+        return cls.serve(cfg, shape=sh, name=name, limits=limits,
+                         serve=serve, **options)
 
     @classmethod
     def synthetic(cls, name: str, kind: str, demand_bytes: int,

@@ -46,6 +46,7 @@ from repro.runtime.executors import Executor, NullExecutor
 from repro.serving.kv_cache import Request
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.router import RequestRouter
     from repro.serving.tenancy import SharedPagePool
 
 GB = 1 << 30
@@ -86,99 +87,69 @@ class AppHandle:
         """The serving backend (ModelRunner) bound to this application."""
         return self.exec_state.get("runner")
 
+    # -- serving data plane (repro.serving.router) ----------------------------
+    @property
+    def replica_set(self):
+        """The app's ReplicaSet (None for train/synthetic apps)."""
+        return self.exec_state.get("replicas")
+
+    @property
+    def num_replicas(self) -> int:
+        """Live replica count (0 while parked: park scales to zero)."""
+        if self.parked:
+            return 0
+        rset = self.replica_set
+        if rset is None:
+            return 1 if self.engine is not None else 0
+        return len(rset.replicas)
+
+    def add_replica(self):
+        """Scale out by one engine replica (shared KV arrays + params:
+        the cost is compute slots, not memory)."""
+        rset = self.replica_set
+        if rset is None:
+            raise RuntimeError(f"{self.app.name}: no replica set "
+                               "(serve applications only)")
+        if self.parked:
+            raise RuntimeError(f"{self.app.name}: unpark before scaling "
+                               "out (a parked app has zero replicas)")
+        return rset.add_replica()
+
+    def remove_replica(self) -> Dict:
+        """Scale in by one replica; its in-flight requests migrate
+        token-identically to a survivor (or requeue)."""
+        rset = self.replica_set
+        if rset is None:
+            raise RuntimeError(f"{self.app.name}: no replica set "
+                               "(serve applications only)")
+        return rset.remove_replica()
+
+    def set_max_batch(self, n: int) -> int:
+        """Set the continuous-batch admission width on every replica
+        (clamped to the runners' compile-shape cap); returns the width
+        actually applied."""
+        rset = self.replica_set
+        if rset is None:
+            raise RuntimeError(f"{self.app.name}: no replica set "
+                               "(serve applications only)")
+        return rset.set_max_batch(n)
+
+    @property
+    def stats_view(self) -> "StatsView":
+        """THE stats surface: cumulative | windowed, replica-aggregated
+        (see :class:`repro.serving.stats.StatsView`)."""
+        from repro.serving.stats import StatsView
+        return StatsView(self)
+
     def serving_stats(self, since: Optional[Dict] = None) -> Dict:
-        """Denial / preemption / latency signals for autoscaling policies.
-
-        Combines the engine's request stats (TTFT, decode-step latency,
-        preemptions) with the page pool's grant/denial counters; when the
-        app serves from a pod-shared pool, the pod-level utilization and
-        per-app denial/preemption tallies ride along so a policy can see
-        WHO is starving whom.
-
-        ``since``: a RAW snapshot previously returned by
-        ``serving_stats()`` (no ``since=``).  Counters (engine, pool,
-        per-app tallies) then come back as the *delta* accumulated since
-        that snapshot -- the windowed semantics the autoscale policies
-        consume -- while gauges (queue depth, utilization, pool sizes)
-        always reflect now.  Windowed results are tagged
-        ``windowed=True`` and refused as markers: deltas of deltas
-        would silently produce lifetime-minus-window garbage."""
-        eng = self.engine
-        if eng is None:
-            return {}
-        out = eng.stats.as_dict()
-        out["queue_len"] = len(eng.queue)
-        out["num_running"] = len(eng.running)
-        out["parked"] = self.parked
-        pool = eng.pool
-        out["pool"] = dict(pool.stats)
-        out["pool_utilization"] = pool.utilization
-        out["pool_quota_pages"] = pool.num_pages
-        out["pool_used_pages"] = getattr(
-            pool, "used", pool.num_pages - len(pool.free))
-        if getattr(pool, "groups", None) is not None:
-            # sliding-window stacks: ring (local-group) pages are charged
-            # separately from the growing tables (see PageGroups)
-            out["pool_used_local_pages"] = getattr(
-                pool, "used_local",
-                pool._local_space() - len(pool.free_local))
-        runner = self.runner
-        if runner is not None and getattr(runner, "store", None) is not None:
-            # live device bytes of this app's KV arrays (gauge).  Aliased
-            # same-shape tenants report the SAME store: dedupe by
-            # kv_store_key when summing across a pod (the pod-level total
-            # is shared_pool.kv_device_bytes below).
-            out["kv_device_bytes"] = runner.store.device_bytes()
-            out["kv_aliased"] = bool(getattr(runner, "shared_kv", False))
-            out["kv_store_key"] = runner.store.key
-        if runner is not None and hasattr(runner, "prefill_pages_computed"):
-            # pages actually computed by prefill (cache hits subtract):
-            # the fig_prefix bench's savings numerator, so it must exist
-            # on the no-cache arm too
-            out["prefill_pages_computed"] = runner.prefill_pages_computed
-        cache = getattr(runner, "prefix", None) if runner is not None else None
-        if cache is not None:
-            # global prefix cache: lifetime counters plus the two gauges
-            # the fig_prefix bench gates on.  shared_pages counts cache-
-            # owned PHYSICAL pages -- excluded from every view's quota but
-            # still inside the pod's used_pages (they are not free).
-            out["prefix"] = dict(cache.stats)
-            out["prefix_lookups"] = cache.stats["lookups"]
-            out["prefix_hits"] = cache.stats["hits"]
-            out["prefix_hit_rate"] = cache.hit_rate
-            out["cow_copies"] = cache.stats["cow_copies"]
-            out["shared_pages"] = cache.num_pages
-        shared = getattr(pool, "shared", None)
-        if shared is not None:
-            out["shared_pool"] = {
-                "num_pages": shared.num_pages,
-                "used_pages": shared.used_pages,
-                "utilization": shared.utilization,
-                "denials_by_app": dict(shared.stats["denials"]),
-                "preemptions_by_app": dict(shared.stats["preemptions"]),
-                "cross_app_preemptions":
-                    shared.stats["cross_app_preemptions"],
-                "kv_device_bytes": shared.kv_device_bytes(),
-            }
-        m = obs_metrics.METRICS
-        if m is not None:
-            # latency histograms for this app's lane (snapshot-dict form:
-            # bucket counts are monotonic counters, so stats_delta windows
-            # them exactly like the engine counters)
-            hist = m.app_histograms(getattr(eng, "_obs_app", None)
-                                    or self.app.name)
-            if hist:
-                out["hist"] = hist
-        out["windowed"] = False
-        if since is not None:
-            if since.get("windowed"):
-                raise ValueError(
-                    "serving_stats(since=...) needs a RAW snapshot, not "
-                    "a windowed result: deltas of deltas are garbage")
-            from repro.autoscale.metrics import stats_delta
-            out = stats_delta(out, since)
-            out["windowed"] = True
-        return out
+        """Back-compat shim over :class:`~repro.serving.stats.StatsView`:
+        ``serving_stats()`` is ``stats_view.cumulative()`` (a valid
+        window marker), ``serving_stats(since=marker)`` is
+        ``stats_view.windowed(marker)``."""
+        view = self.stats_view
+        if since is None:
+            return view.cumulative()
+        return view.windowed(since)
 
     def _ensure_bound(self) -> None:
         if self.job.state != "running":
@@ -216,7 +187,11 @@ class AppHandle:
             self.cluster.executor.maybe_checkpoint(self)
             self.metrics.append(m)
             return m
-        alive = self.engine.step()
+        rset = self.replica_set
+        if rset is not None and rset.router is not None:
+            alive = rset.router.step_app(self.app.name)
+        else:
+            alive = self.engine.step()
         return {"alive": alive, "stats": self.engine.stats}
 
     def run(self, steps: Optional[int] = None, *,
@@ -236,8 +211,24 @@ class AppHandle:
                     "straggled": len(self.watchdog.flags)}
         if self.parked:
             self.unpark()
-        stats = self.engine.run_to_completion(max_steps=max_steps)
-        return stats.as_dict()
+        rset = self.replica_set
+        if rset is None or rset.router is None:
+            stats = self.engine.run_to_completion(max_steps=max_steps)
+            return stats.as_dict()
+        # scale-out path: drain the router queue plus every replica;
+        # counters aggregate across replicas so the dict keeps the exact
+        # shape (and, for one replica, the exact values) of the old path
+        from repro.serving.stats import aggregate_engine_stats
+        router = rset.router
+        t0 = time.perf_counter()
+        steps = 0
+        while steps < max_steps and router.step_app(self.app.name):
+            steps += 1
+        wall = time.perf_counter() - t0
+        self.engine.stats.wall_s = wall
+        agg = aggregate_engine_stats(self)
+        agg.wall_s = wall
+        return agg.as_dict()
 
     def submit_request(self, req: Request) -> None:
         """Enqueue one serving request; a parked application is
@@ -246,7 +237,11 @@ class AppHandle:
         self._ensure_bound()
         if self.parked:
             self.unpark()
-        self.engine.submit(req)
+        rset = self.replica_set
+        if rset is not None and rset.router is not None:
+            rset.router.submit(self.app.name, req)
+        else:
+            self.engine.submit(req)
 
     # -- runtime scaling (paper §5.1.2) -------------------------------------
     def scale_up(self, extra_bytes: int) -> bool:
@@ -333,6 +328,9 @@ class Cluster:
         # ``pool_pages`` when given, else by the first tenant's request
         self.pool_pages = pool_pages
         self._pod_pools: Dict[str, "SharedPagePool"] = {}
+        # per-pod front-end request routers (scale-out serving data
+        # plane); created lazily like the pools
+        self._routers: Dict[str, "RequestRouter"] = {}
         # the autoscale control plane (repro.autoscale); opt-in via
         # enable_autoscale(), driven by tick()
         self.autoscaler = None
@@ -350,6 +348,18 @@ class Cluster:
             self._pod_pools[pod] = sp
         return sp
 
+    def router(self, pod: str) -> "RequestRouter":
+        """The pod's front-end request router (created lazily).  Every
+        serve application placed on ``pod`` registers its ReplicaSet
+        here; ``submit_request`` enqueues into the router, which spreads
+        admissions across the app's replicas (join-shortest-queue)."""
+        from repro.serving.router import RequestRouter
+        rt = self._routers.get(pod)
+        if rt is None:
+            rt = RequestRouter(pod)
+            self._routers[pod] = rt
+        return rt
+
     # -- the control plane (repro.autoscale) ---------------------------------
     def enable_autoscale(self, *, ttft_target_s: Optional[float] = None,
                          denial_target_per_s: float = 0.5,
@@ -362,10 +372,18 @@ class Cluster:
         from repro.autoscale.controller import AutoscaleController
         from repro.autoscale.policy import default_policies
         if "make_policies" not in controller_kw:
-            controller_kw["make_policies"] = lambda: default_policies(
-                ttft_target_s=ttft_target_s,
-                denial_target_per_s=denial_target_per_s,
-                idle_park_s=idle_park_s)
+            def _mk(handle=None):
+                # per-app chain: a ScalePolicy on the app's ServeOptions
+                # adds replica/batch scalers + predictive unpark
+                scale = None
+                if handle is not None and handle.app.serve_options is not None:
+                    scale = handle.app.serve_options.scale
+                return default_policies(
+                    ttft_target_s=ttft_target_s,
+                    denial_target_per_s=denial_target_per_s,
+                    idle_park_s=idle_park_s,
+                    scale=scale)
+            controller_kw["make_policies"] = _mk
         self.autoscaler = AutoscaleController(self, **controller_kw)
         for h in self.handles.values():
             self.autoscaler.attach(h)

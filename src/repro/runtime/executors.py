@@ -18,11 +18,13 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, TYPE_CHECKING
 
 from repro.core.compile_cache import CompileCache, plan_layout_key
+from repro.runtime.options import ServeOptions
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PagePool
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.runtime.cluster import AppHandle
+    from repro.serving.router import Replica
 
 DEFAULT_POOL_PAGES = 256
 
@@ -32,55 +34,92 @@ class Executor:
 
     name = "null"
     default_pool_pages = DEFAULT_POOL_PAGES
+    default_max_batch = 8
 
     def bind(self, handle: "AppHandle") -> None:
         """Materialize executable state for a placed application."""
         if handle.app.kind == "serve":
-            handle.exec_state["engine"] = self.build_engine(handle)
+            self._bind_serve(handle)
+
+    @staticmethod
+    def serve_opts(handle: "AppHandle") -> ServeOptions:
+        """The app's typed serve surface (directly-constructed
+        Applications may still carry a legacy options dict)."""
+        so = getattr(handle.app, "serve_options", None)
+        if so is not None:
+            return so
+        return ServeOptions.from_kwargs(handle.app.options or {})
+
+    def _bind_serve(self, handle: "AppHandle") -> None:
+        """Serve data plane: a ReplicaSet of engines registered with the
+        pod's RequestRouter.  ``exec_state['engine']`` stays the primary
+        replica's engine (the stable single-engine surface tests and
+        tools already consume)."""
+        from repro.serving.router import ReplicaSet
+        opts = self.serve_opts(handle)
+        rset = ReplicaSet(handle.app.name,
+                          lambda idx: self.build_replica(handle, idx),
+                          initial=opts.replicas, app_weight=opts.weight,
+                          quota_pages=opts.quota_pages
+                          if isinstance(opts.quota_pages, int) else None)
+        try:
+            handle.cluster.router(handle.pod).register(handle.app.name, rset)
+        except Exception:
+            rset.shutdown()
+            raise
+        handle.exec_state["replicas"] = rset
+        handle.exec_state["engine"] = rset.primary.engine
 
     def train_step(self, handle: "AppHandle") -> Dict[str, float]:
         return {"loss": 0.0}
 
-    def build_pool(self, handle: "AppHandle") -> PagePool:
+    def build_pool(self, handle: "AppHandle",
+                   view_name: Optional[str] = None) -> PagePool:
         """The application's KV page pool.
 
         Default: a quota/weight-scoped *view* onto the pod's single
         :class:`~repro.serving.tenancy.SharedPagePool`, so every serve app
         placed on one pod draws from one physical pool (the paper's
-        resource sharing).  ``options['private_pool']=True`` opts out into
+        resource sharing).  ``ServeOptions.private_pool`` opts out into
         the old one-pool-per-app peak provisioning (the benchmark's
         baseline arm).
+
+        Replica views carry suffixed names (``view_name``) but one
+        per-app ``history_key``, so N replicas feed one sizing-history
+        series instead of fragmenting it.
 
         When the app serves through the paged backend on a mixed
         global/sliding-window stack, the pool carries the model's
         :class:`~repro.serving.kv_cache.PageGroups` so local-attention
         layers are charged a bounded ring instead of the growing table
-        (``options['swa_rings']=False`` opts out, the benchmark's no-ring
-        arm)."""
-        opts = handle.app.options
-        pages = int(opts.get("pool_pages", self.default_pool_pages))
-        policy = opts.get("policy", "history")
+        (``swa_rings=False`` opts out, the benchmark's no-ring arm)."""
+        opts = self.serve_opts(handle)
+        pages = int(opts.pool_pages or self.default_pool_pages)
         groups = None
-        if (opts.get("backend") == "paged" and handle.app.config is not None
-                and opts.get("swa_rings", True)):
+        if (opts.backend == "paged" and handle.app.config is not None
+                and opts.swa_rings):
             from repro.serving.kv_cache import PageGroups
             g = PageGroups.from_config(handle.app.config)
             groups = g if g.local_layers else None
-        if opts.get("private_pool"):
+        if opts.private_pool:
             return PagePool(pages, history=handle.cluster.history,
-                            app=handle.app.name, policy=policy,
+                            app=handle.app.name, policy=opts.policy,
                             groups=groups)
         shared = handle.cluster.pod_pool(handle.pod, default_pages=pages)
-        return shared.view(handle.app.name,
-                           quota=opts.get("quota_pages"),
-                           weight=float(opts.get("weight", 1.0)),
-                           policy=policy, groups=groups)
+        return shared.view(view_name or handle.app.name,
+                           quota=opts.quota_pages, weight=opts.weight,
+                           policy=opts.policy, groups=groups,
+                           history_key=handle.app.name)
 
-    def build_engine(self, handle: "AppHandle") -> ServingEngine:
-        opts = handle.app.options
-        return ServingEngine(self.build_pool(handle),
-                             max_batch=int(opts.get("max_batch", 8)),
-                             history=handle.cluster.history)
+    def build_replica(self, handle: "AppHandle", idx: int) -> "Replica":
+        from repro.serving.router import Replica, replica_view_name
+        opts = self.serve_opts(handle)
+        pool = self.build_pool(
+            handle, view_name=replica_view_name(handle.app.name, idx))
+        eng = ServingEngine(pool,
+                            max_batch=opts.max_batch or self.default_max_batch,
+                            history=handle.cluster.history)
+        return Replica(idx, eng)
 
     def maybe_checkpoint(self, handle: "AppHandle") -> None:
         pass
@@ -93,9 +132,14 @@ class Executor:
         return 0
 
     def release(self, handle: "AppHandle") -> None:
-        engine = handle.exec_state.get("engine")
-        if engine is not None:
-            engine.shutdown()      # return pages to the pod's shared pool
+        rset = handle.exec_state.get("replicas")
+        if rset is not None:
+            handle.cluster.router(handle.pod).unregister(handle.app.name)
+            rset.shutdown()    # return pages to the pod's shared pool
+        else:
+            engine = handle.exec_state.get("engine")
+            if engine is not None:
+                engine.shutdown()
         handle.exec_state.clear()
 
 
@@ -132,7 +176,7 @@ class JaxExecutor(Executor):
         if handle.app.kind == "train":
             self._bind_train(handle)
         else:
-            handle.exec_state["engine"] = self.build_engine(handle)
+            self._bind_serve(handle)
 
     def _bind_train(self, handle: "AppHandle") -> None:
         import jax
@@ -203,38 +247,47 @@ class JaxExecutor(Executor):
 
     # -- serving ------------------------------------------------------------
     default_pool_pages = 128
+    default_max_batch = 4
 
-    def build_engine(self, handle: "AppHandle") -> ServingEngine:
+    def build_replica(self, handle: "AppHandle", idx: int) -> "Replica":
         from repro.serving.model_runner import (KVArrayStore, PagedRunner,
                                                 build_runner, kv_shape_key)
-
         from repro.serving.prefix_cache import PrefixCache
+        from repro.serving.router import Replica, replica_view_name
 
         app = handle.app
-        opts = app.options
-        max_batch = int(opts.get("max_batch", 4))
-        backend = opts.get("backend", "dense")
-        use_rings = bool(opts.get("swa_rings", True))
-        pool = self.build_pool(handle)
+        opts = self.serve_opts(handle)
+        max_batch = opts.max_batch or self.default_max_batch
+        # both backends pad decode to the runner's build-time batch, so a
+        # batch-scaling policy gets its headroom baked into the compile
+        # shape up front: the engine's admission width then moves within
+        # it with zero retraces
+        runner_batch = max_batch
+        if opts.scale is not None and opts.scale.batch_max is not None:
+            runner_batch = max(runner_batch, opts.scale.batch_max)
+        backend = opts.backend
+        use_rings = opts.swa_rings
+        pool = self.build_pool(
+            handle, view_name=replica_view_name(app.name, idx))
         try:
             kv_store = None
             if (backend == "paged"
                     and getattr(pool, "shared", None) is not None
-                    and bool(opts.get("alias_kv", True))
+                    and opts.alias_kv
                     and all(k in PagedRunner.SUPPORTED_KINDS
                             for k in app.config.pattern)):
                 # physical aliasing: every same-KV-shape paged tenant on
-                # this pod reads/writes ONE device page-array set, keyed
-                # by shape (mismatched shapes get their own store, i.e.
-                # fall back to private arrays; opts['alias_kv']=False
-                # opts out explicitly)
+                # this pod -- and every replica of one app -- reads/writes
+                # ONE device page-array set, keyed by shape (mismatched
+                # shapes get their own store, i.e. fall back to private
+                # arrays; alias_kv=False opts out explicitly)
                 key = kv_shape_key(app.config, pool.physical_pages,
                                    use_rings=use_rings)
                 kv_store = pool.shared.kv_store(
                     key, lambda: KVArrayStore(key))
                 pool.bind_kv_store(kv_store)
             prefix_cache = None
-            if bool(opts.get("prefix_cache", False)) and backend == "paged":
+            if opts.prefix_cache:
                 if kv_store is not None:
                     # pod-global cache: keyed by (kv shape, model, seed)
                     # -- same-weights tenants share cached prefixes, and
@@ -258,16 +311,13 @@ class JaxExecutor(Executor):
                     prefix_cache = PrefixCache(
                         (None, app.config.name, self.seed), free_fn)
                 pool.prefix_cache = prefix_cache
-            elif bool(opts.get("prefix_cache", False)):
-                # dense backend: reject loudly inside build_runner below
-                prefix_cache = PrefixCache((None,), lambda pages: None)
             runner = build_runner(backend, app.config,
-                                  seed=self.seed, max_batch=max_batch,
-                                  cache_len=int(opts.get("cache_len", 256)),
+                                  seed=self.seed, max_batch=runner_batch,
+                                  cache_len=opts.cache_len,
                                   pool_pages=pool.physical_pages,
                                   use_rings=use_rings, kv_store=kv_store,
                                   prefix_cache=prefix_cache,
-                                  chunk_pages=int(opts.get("chunk_pages", 4)))
+                                  chunk_pages=opts.chunk_pages or 4)
         except Exception:
             # the pool view is already registered on the pod: an orphan
             # would dilute every tenant's fair share forever (close also
@@ -276,10 +326,17 @@ class JaxExecutor(Executor):
             if close is not None:
                 close()
             raise
-        handle.exec_state.update(model=runner.model, params=runner.params,
-                                 runner=runner)
-        return ServingEngine(pool, max_batch=max_batch, runner=runner,
-                             history=handle.cluster.history)
+        prim = handle.exec_state.get("runner")
+        if idx > 0 and prim is not None and prim.backend == runner.backend:
+            # replicas serve one model: alias the primary's weights so a
+            # replica costs compute slots, not a second params copy
+            runner.params = prim.params
+        eng = ServingEngine(pool, max_batch=max_batch, runner=runner,
+                            history=handle.cluster.history)
+        if idx == 0:
+            handle.exec_state.update(model=runner.model,
+                                     params=runner.params, runner=runner)
+        return Replica(idx, eng, runner=runner)
 
     def release(self, handle: "AppHandle") -> None:
         ck = handle.exec_state.get("checkpointer")

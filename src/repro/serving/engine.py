@@ -116,8 +116,12 @@ class ServingEngine:
         if attach is not None:          # tenancy view: register for cross-app
             attach(self)                # victim selection
 
-    def submit(self, req: Request) -> None:
-        req.submitted_at = time.perf_counter()
+    def submit(self, req: Request, *,
+               submitted_at: Optional[float] = None) -> None:
+        # the router stamps arrival time once at the front door and passes
+        # it through, so TTFT includes router-queue wait on dispatch
+        req.submitted_at = (time.perf_counter() if submitted_at is None
+                            else submitted_at)
         self.queue.append(req)
         t = obs_trace.TRACER
         if t is not None:

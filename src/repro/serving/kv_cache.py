@@ -138,6 +138,9 @@ class PagePool:
         self.free: List[int] = list(range(num_pages))
         self.history = history
         self.app = app
+        # sizing-history identity: replicas of one app carry distinct view
+        # names (``app``) but must read/write ONE per-app history series
+        self.history_key = app
         self.policy = policy
         self.fixed = (fixed_init_pages, fixed_step_pages)
         self._sizing: Optional[SizingSolution] = None
@@ -189,7 +192,7 @@ class PagePool:
             self._solve_counter = 0
             hist = []
             if self.history is not None:
-                h = self.history.get(self.app, "request", "pages")
+                h = self.history.get(self.history_key, "request", "pages")
                 if h is not None:
                     hist = h.samples()
             if self.policy == "peak":
@@ -405,7 +408,7 @@ class PagePool:
         self._dealloc_local(req.local_pages)
         self.stats["released"] += 1
         if self.history is not None:
-            self.history.observe(self.app, "request", "pages",
+            self.history.observe(self.history_key, "request", "pages",
                                  max(len(req.pages), 1))
         req.pages = []
         req.local_pages = []

@@ -228,6 +228,30 @@ class ModelRunner:
             self.params = self._tree_from_host(state["params"])
         self.generated = {k: list(v) for k, v in state["generated"].items()}
 
+    # -- replica migration (serving.router.ReplicaSet) -----------------------
+    #: replicas sharing one physical KV array set can hand running
+    #: requests to each other without loss (paged); slot-indexed caches
+    #: cannot (dense), so their requests take the requeue path instead
+    can_migrate = False
+
+    def migrate_out(self, drained: List[Tuple[Request, Tuple[List[int],
+                                                             List[int]]]]
+                    ) -> Dict:
+        """Decode-state snapshot for replica-to-replica migration: park
+        minus the params offload -- the surviving replicas keep serving,
+        so weights stay on device and only the drained requests' state
+        moves."""
+        return {"generated": {req.req_id: self.generated.pop(req.req_id, [])
+                              for req, _ in drained}}
+
+    def migrate_in(self, state: Dict, restored: List[Request]) -> None:
+        """Adopt migrated requests.  Unlike ``unpark`` (which REPLACES
+        decode state wholesale), the target's own running requests keep
+        theirs: only the restored requests' entries merge in."""
+        for req in restored:
+            self.generated[req.req_id] = list(
+                state["generated"].get(req.req_id, []))
+
 
 class DenseRunner(ModelRunner):
     """Slot-indexed dense KV cache; decode via ``model.decode_step``."""
@@ -941,24 +965,7 @@ class PagedRunner(ModelRunner):
         tenant's real reclamation is its pages returning to the shared
         free list, where the co-tenants immediately reuse them."""
         state = super().park(drained)
-        table_layers = [l for l in range(self.num_layers)
-                        if not self._layer_ring(l)]
-        ring_layers = [l for l in range(self.num_layers)
-                       if self._layer_ring(l)]
-
-        def gather(layers, ids):
-            if not layers or not ids:
-                return None
-            idx = jnp.asarray(ids, jnp.int32)
-            k = np.stack([np.asarray(self.k_pages[l][idx]) for l in layers])
-            v = np.stack([np.asarray(self.v_pages[l][idx]) for l in layers])
-            return (_to_savable(k), _to_savable(v))
-
-        kv = {}
-        for req, (g_ids, l_ids) in drained:
-            kv[req.req_id] = {"g": gather(table_layers, g_ids),
-                              "l": gather(ring_layers, l_ids)}
-        state["kv"] = kv
+        state["kv"] = self._gather_drained(drained)
         # drop the device arrays unless a co-tenant still decodes through
         # them: a PARKED co-tenant doesn't count (its KV is already
         # snapshotted to host, and unpark revives the arrays), so the
@@ -984,12 +991,44 @@ class PagedRunner(ModelRunner):
     def unpark(self, state, restored):
         super().unpark(state, restored)
         self.store.ensure_arrays()      # no-op when co-tenants kept them
+        self._scatter_restored(state["kv"], restored)
+
+    def _layer_split(self):
         table_layers = [l for l in range(self.num_layers)
                         if not self._layer_ring(l)]
         ring_layers = [l for l in range(self.num_layers)
                        if self._layer_ring(l)]
+        return table_layers, ring_layers
+
+    def _gather_drained(self, drained):
+        """Host snapshot of each drained request's KV, keyed by request:
+        per layer group one (layers, n_pages, PAGE, KV, hd) array for the
+        growing tables and one for the rings.  ``drained`` carries the
+        *physical* ids ``reclaim`` translated before freeing."""
+        table_layers, ring_layers = self._layer_split()
+
+        def gather(layers, ids):
+            if not layers or not ids:
+                return None
+            idx = jnp.asarray(ids, jnp.int32)
+            k = np.stack([np.asarray(self.k_pages[l][idx]) for l in layers])
+            v = np.stack([np.asarray(self.v_pages[l][idx]) for l in layers])
+            return (_to_savable(k), _to_savable(v))
+
+        kv = {}
+        for req, (g_ids, l_ids) in drained:
+            kv[req.req_id] = {"g": gather(table_layers, g_ids),
+                              "l": gather(ring_layers, l_ids)}
+        return kv
+
+    def _scatter_restored(self, kv, restored):
+        """Write gathered KV back at each restored request's CURRENT
+        grants -- ``self._phys`` maps through this runner's own view, so
+        the same helper serves unpark (same view, fresh ids) and replica
+        migration (target view, same physical arrays)."""
+        table_layers, ring_layers = self._layer_split()
         for req in restored:
-            saved = state["kv"][req.req_id]
+            saved = kv[req.req_id]
             for layers, ids, packed in ((table_layers, self._phys(req.pages),
                                          saved["g"]),
                                         (ring_layers,
@@ -1006,6 +1045,17 @@ class PagedRunner(ModelRunner):
                      self.store.v_pages[layer]) = self._scatter(
                         self.store.k_pages[layer],
                         self.store.v_pages[layer], pages, k[li], v[li])
+
+    can_migrate = True
+
+    def migrate_out(self, drained):
+        state = super().migrate_out(drained)
+        state["kv"] = self._gather_drained(drained)
+        return state
+
+    def migrate_in(self, state, restored):
+        super().migrate_in(state, restored)
+        self._scatter_restored(state["kv"], restored)
 
 
 def build_runner(backend: str, cfg: ModelConfig, *, seed: int = 0,

@@ -69,10 +69,14 @@ class SharedPagePool:
              quota: Union[int, str, None] = None, weight: float = 1.0,
              policy: str = "history", fixed_init_pages: int = 2,
              fixed_step_pages: int = 1,
-             groups: Optional[PageGroups] = None) -> "PoolView":
+             groups: Optional[PageGroups] = None,
+             history_key: Optional[str] = None) -> "PoolView":
         """The (single) view of one application; app names must be unique
         per pod -- a live duplicate would merge two engines' page
-        accounting onto one quota and corrupt victim selection."""
+        accounting onto one quota and corrupt victim selection.  Replica
+        views of one app carry suffixed names (``app@rN``) but pass the
+        bare app name as ``history_key`` so sizing history stays one
+        per-application series."""
         v = self.views.get(app)
         if v is not None:
             if v.engine is not None:
@@ -86,6 +90,8 @@ class SharedPagePool:
         v = PoolView(self, app, quota=quota, weight=weight,
                      policy=policy, fixed_init_pages=fixed_init_pages,
                      fixed_step_pages=fixed_step_pages, groups=groups)
+        if history_key is not None:
+            v.history_key = history_key
         self.views[app] = v
         return v
 

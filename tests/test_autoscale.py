@@ -9,7 +9,8 @@ from repro.autoscale import (IdleParker, MetricsWindow, QuotaRebalancer,
                              TargetTracking, stats_delta)
 from repro.core.history import HistoryStore
 from repro.core.scheduler import PodState
-from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.runtime import (Application, Cluster, JaxExecutor, NullExecutor,
+                           ScalePolicy, ServeOptions)
 from repro.serving.engine import EngineStats, ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, Request
 from repro.serving.tenancy import SharedPagePool
@@ -38,8 +39,9 @@ def test_engine_stats_snapshot_delta_reset():
 
 def test_serving_stats_since_marker():
     cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=64)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="windowed", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="windowed",
+        serve=ServeOptions(max_batch=4)))
     for i in range(4):
         h.submit_request(Request(f"r{i}", 16, 4))
     while h.step()["alive"]:
@@ -121,11 +123,12 @@ def test_metrics_window_rates_and_idle():
 # policies
 # ---------------------------------------------------------------------------
 
-def _handle_with_traffic(cluster=None, **opts):
+def _handle_with_traffic(cluster=None, name=None, **opts):
     cluster = cluster or Cluster(pods=1, history=HistoryStore(),
                                  executor=NullExecutor(), pool_pages=32)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         max_batch=4, **opts))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name=name,
+        serve=ServeOptions(max_batch=4, **opts)))
     return cluster, h
 
 
@@ -223,8 +226,9 @@ def test_quota_rebalancer_tracks_demand():
 def test_park_releases_pages_and_bytes():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=32)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="parkme", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="parkme",
+        serve=ServeOptions(max_batch=4)))
     free0 = cluster.capacity()["pod0"]["free_bytes"]
     demand = h.job.demand_bytes
     assert demand > 0
@@ -264,8 +268,9 @@ def test_park_unpark_cycles_no_byte_leak():
     be exactly restored every cycle (the satellite regression)."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=16)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="cycler", max_batch=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="cycler",
+        serve=ServeOptions(max_batch=2)))
     for i in range(2):
         h.submit_request(Request(f"r{i}", PAGE_SIZE - 4, 400))
     for _ in range(2):
@@ -321,8 +326,9 @@ def test_park_release_does_not_poison_sizing_history():
     hist = HistoryStore()
     cluster = Cluster(pods=1, history=hist, executor=NullExecutor(),
                       pool_pages=8)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="poison", max_batch=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="poison",
+        serve=ServeOptions(max_batch=2)))
     demand0 = h.job.demand_bytes
     h.park()
     assert h.job.demand_bytes == 0
@@ -342,8 +348,9 @@ def test_default_policy_chain_parks_before_grinding_down():
                       executor=NullExecutor(), pool_pages=8)
     cluster.enable_autoscale(idle_park_s=2.0, confirm_ticks=1)
     # huge synthetic demand: thousands of 64 MiB shrink steps available
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="big", max_batch=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="big",
+        serve=ServeOptions(max_batch=2)))
     h.job.demand_bytes = 256 << 30
     cluster.scheduler.pods["pod0"].pod.free_bytes -= (256 << 30) - 213376
     for t in range(5):
@@ -376,8 +383,8 @@ def _serve_with_park(backend, park_cycles, *, n=3, prompt=200, max_new=8,
                       executor=JaxExecutor(seed=0))
     h = cluster.submit(Application.serve(
         arch, reduced=True, name=f"park-{backend}",
-        max_batch=4, pool_pages=32, cache_len=512, policy="history",
-        backend=backend))
+        serve=ServeOptions(max_batch=4, pool_pages=32, cache_len=512,
+                           policy="history", backend=backend)))
     reqs = [Request(f"r{i}", prompt_len=prompt, max_new_tokens=max_new)
             for i in range(n)]
     for r in reqs:
@@ -431,10 +438,12 @@ def test_unpark_under_pool_pressure():
     + re-execution -- never stranding pages, never losing requests."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=8)
-    a = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="parked", max_batch=2))
-    b = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="squatter", max_batch=8))
+    a = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="parked",
+        serve=ServeOptions(max_batch=2)))
+    b = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="squatter",
+        serve=ServeOptions(max_batch=8)))
     for i in range(2):
         a.submit_request(Request(f"a{i}", PAGE_SIZE * 2 - 4, 60))
     for _ in range(2):
@@ -468,8 +477,9 @@ def test_controller_parks_idle_app_and_unparks_on_submit():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=32)
     cluster.enable_autoscale(idle_park_s=5.0, confirm_ticks=2)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="ticker", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="ticker",
+        serve=ServeOptions(max_batch=4)))
     for i in range(3):
         h.submit_request(Request(f"r{i}", 48, 8))
     t = 0.0
@@ -495,9 +505,9 @@ def test_controller_hysteresis_and_cooldown():
                       executor=NullExecutor(), pool_pages=16)
     ctl = cluster.enable_autoscale(denial_target_per_s=0.5,
                                    confirm_ticks=3, cooldown_up_s=10.0)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="hyst", max_batch=4,
-                                         quota_pages=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="hyst",
+        serve=ServeOptions(max_batch=4, quota_pages=2)))
     # quota-starved traffic produces a sustained denial signal (each
     # request fits the 2-page quota, but concurrency does not)
     for i in range(6):
@@ -523,9 +533,9 @@ def test_controller_never_scales_a_parked_app():
                       executor=NullExecutor(), pool_pages=4)
     ctl = cluster.enable_autoscale(idle_park_s=3.0, confirm_ticks=1,
                                    denial_target_per_s=0.5)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="spiky", max_batch=4,
-                                         quota_pages=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="spiky",
+        serve=ServeOptions(max_batch=4, quota_pages=2)))
     for i in range(4):      # quota-starved: builds a strong denial EWMA
         h.submit_request(Request(f"r{i}", PAGE_SIZE - 4, 130))
     t = 0.0

@@ -12,7 +12,7 @@ snapshots only the view's pages without yanking co-tenants' arrays.
 import pytest
 
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor
+from repro.runtime import Application, Cluster, JaxExecutor, ServeOptions
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, Request
 from repro.serving.tenancy import SharedPagePool
@@ -132,8 +132,9 @@ def test_mixed_pod_aliasing_acceptance():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=64)
     mk = lambda name, arch, **o: cluster.submit(Application.serve(
-        arch, reduced=True, name=name, max_batch=4, backend="paged",
-        policy="fixed", **o))
+        arch, reduced=True, name=name,
+        serve=ServeOptions(max_batch=4, backend="paged",
+                           policy="fixed", **o)))
     a = mk("alias-a", "tinyllama-1.1b")
     b = mk("alias-b", "tinyllama-1.1b")
     c = mk("private-c", "tinyllama-1.1b", alias_kv=False)
@@ -180,11 +181,13 @@ def test_park_unpark_aliased_keeps_cotenant_arrays():
         cluster = Cluster(pods=1, history=HistoryStore(),
                           executor=JaxExecutor(seed=0), pool_pages=16)
         t0 = cluster.submit(Application.serve(
-            "tinyllama-1.1b", reduced=True, name="t0", max_batch=2,
-            backend="paged", policy="fixed"))
+            "tinyllama-1.1b", reduced=True, name="t0",
+            serve=ServeOptions(max_batch=2, backend="paged",
+                               policy="fixed")))
         t1 = cluster.submit(Application.serve(
-            "tinyllama-1.1b", reduced=True, name="t1", max_batch=2,
-            backend="paged", policy="fixed"))
+            "tinyllama-1.1b", reduced=True, name="t1",
+            serve=ServeOptions(max_batch=2, backend="paged",
+                               policy="fixed")))
         r0 = _submit(t0, [("a", 200, 24), ("b", 64, 24)])
         r1 = _submit(t1, [("c", 200, 24), ("d", 64, 24)])
         for _ in range(3):
@@ -221,11 +224,13 @@ def test_all_parked_aliased_tenants_drop_arrays():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=16)
     a = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name="a", max_batch=2,
-        backend="paged", policy="fixed"))
+        "tinyllama-1.1b", reduced=True, name="a",
+        serve=ServeOptions(max_batch=2, backend="paged",
+                           policy="fixed")))
     b = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name="b", max_batch=2,
-        backend="paged", policy="fixed"))
+        "tinyllama-1.1b", reduced=True, name="b",
+        serve=ServeOptions(max_batch=2, backend="paged",
+                           policy="fixed")))
     ra = _submit(a, [("a0", 64, 12)])
     rb = _submit(b, [("b0", 64, 12)])
     for _ in range(2):
@@ -257,8 +262,9 @@ def test_sole_aliased_tenant_park_drops_arrays():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=16)
     h = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name="solo", max_batch=2,
-        backend="paged", policy="fixed"))
+        "tinyllama-1.1b", reduced=True, name="solo",
+        serve=ServeOptions(max_batch=2, backend="paged",
+                           policy="fixed")))
     reqs = _submit(h, [("a", 200, 16)])
     for _ in range(3):
         h.step()

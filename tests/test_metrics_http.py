@@ -1,0 +1,99 @@
+"""Streaming /metrics endpoint (repro.obs.http): stdlib HTTP server
+over the process-global Prometheus registry."""
+
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro import obs
+from repro.core.history import HistoryStore
+from repro.runtime import Application, Cluster, NullExecutor, ServeOptions
+from repro.serving.kv_cache import PAGE_SIZE, Request
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    obs.disable()
+    obs.disable_metrics()
+    yield
+    obs.disable()
+    obs.disable_metrics()
+
+
+@pytest.fixture
+def srv():
+    s = obs.serve_metrics(port=0)       # ephemeral port
+    yield s
+    s.stop()
+
+
+def _get(port, path="/metrics"):
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}{path}", timeout=5) as resp:
+        return resp.status, resp.read().decode("utf-8")
+
+
+def test_scrape_serves_live_registry(srv):
+    obs.enable_metrics()
+    cluster = Cluster(pods=1, history=HistoryStore(),
+                      executor=NullExecutor(), pool_pages=16)
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="scrape",
+        serve=ServeOptions(max_batch=2)))
+    for i in range(3):
+        h.submit_request(Request(f"m{i}", PAGE_SIZE - 4, 4))
+    h.run(max_steps=200)
+
+    status, body = _get(srv.port)
+    assert status == 200
+    assert "repro_" in body             # engine histograms made it out
+    assert "# TYPE" in body             # Prometheus text exposition
+    h.release()
+
+    # "/" is an alias; query strings are ignored
+    assert _get(srv.port, "/")[0] == 200
+    assert _get(srv.port, "/metrics?x=1")[0] == 200
+
+
+def test_scrape_before_enable_is_503(srv):
+    # the global registry is not installed: scrapes get an explicit 503,
+    # and the SAME server starts serving data once metrics are enabled
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        _get(srv.port)
+    assert exc.value.code == 503
+    assert b"enable_metrics" in exc.value.read()
+
+    reg = obs.enable_metrics()
+    reg.inc("repro_scrapes_total", app="t")
+    status, body = _get(srv.port)
+    assert status == 200
+    assert "repro_scrapes_total" in body
+
+
+def test_unknown_path_is_404(srv):
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        _get(srv.port, "/health")
+    assert exc.value.code == 404
+
+
+def test_explicit_registry_overrides_global():
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.inc("repro_private_total")
+    s = obs.serve_metrics(port=0, registry=reg)
+    try:
+        status, body = _get(s.port)
+        assert status == 200
+        assert "repro_private_total" in body
+    finally:
+        s.stop()
+
+
+def test_stop_closes_listener_and_is_idempotent():
+    s = obs.serve_metrics(port=0)
+    port = s.port
+    s.stop()
+    s.stop()                            # second stop is a no-op
+    with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+        _get(port)

@@ -17,7 +17,8 @@ from repro.core.history import HistoryStore
 from repro.obs.metrics import (LATENCY_BOUNDS, OCCUPANCY_BOUNDS, Histogram,
                                hist_delta, hist_merge)
 from repro.obs.summary import pctl, request_lifecycles, summarize
-from repro.runtime import Application, Cluster, NullExecutor
+from repro.runtime import (Application, Cluster, NullExecutor,
+                           ServeOptions)
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PAGE_SIZE, PagePool, Request
 
@@ -179,8 +180,9 @@ def test_pool_events_and_preempt():
     t = obs.enable()
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=8)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="obs-pool", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="obs-pool",
+        serve=ServeOptions(max_batch=4)))
     for i in range(4):
         h.submit_request(Request(f"r{i}", PAGE_SIZE - 4, 3 * PAGE_SIZE))
     h.run(max_steps=50_000)
@@ -200,8 +202,9 @@ def test_park_unpark_and_autoscale_events():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=32)
     cluster.enable_autoscale(idle_park_s=2.0, confirm_ticks=1)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="obs-park", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="obs-park",
+        serve=ServeOptions(max_batch=4)))
     # direct park with a request mid-flight: the drain must be visible
     h.submit_request(Request("r0", PAGE_SIZE - 4, 300))
     for _ in range(3):
@@ -375,8 +378,9 @@ def test_metrics_window_zero_count_holds_ewma():
 def test_serving_stats_hist_windows_through_since():
     obs.enable_metrics()
     cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=64)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="histwin", max_batch=4))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="histwin",
+        serve=ServeOptions(max_batch=4)))
     for i in range(3):
         h.submit_request(Request(f"r{i}", 16, 4))
     while h.step()["alive"]:

@@ -21,7 +21,7 @@ Two layers:
 import pytest
 
 from repro.core.history import HistoryStore
-from repro.runtime import Application, Cluster, JaxExecutor
+from repro.runtime import Application, Cluster, JaxExecutor, ServeOptions
 from repro.serving.kv_cache import PAGE_SIZE, Request
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.tenancy import SharedPagePool
@@ -235,9 +235,9 @@ def _overlap_requests(n, *, shared_len=2 * PAGE_SIZE + 25, suffix_len=70,
 
 def _mk_handle(cluster, name, *, backend="paged", prefix=False, **opts):
     return cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, name=name, max_batch=2,
-        backend=backend, policy="fixed", cache_len=1024,
-        prefix_cache=prefix, **opts))
+        "tinyllama-1.1b", reduced=True, name=name,
+        serve=ServeOptions(max_batch=2, backend=backend, policy="fixed",
+                           cache_len=1024, prefix_cache=prefix, **opts)))
 
 
 def _serve_seq(h, reqs):
@@ -300,8 +300,10 @@ def test_chunked_prefill_matches_dense_on_long_prompts():
 
 def test_dense_backend_rejects_prefix_cache():
     """Dense KV has no page identity to share: asking for the prefix
-    cache must fail loudly, not silently serve uncached -- and the
-    failed bind must not leak its pool view on the pod."""
+    cache must fail loudly, not silently serve uncached.  The typed API
+    now rejects the combination at ServeOptions construction -- before
+    any bind, so no pool view can leak; build_runner keeps its own
+    defense-in-depth check for direct callers."""
     from repro.configs import get_config
     from repro.configs.reduced import reduced_config
     from repro.serving.model_runner import build_runner
@@ -312,10 +314,10 @@ def test_dense_backend_rejects_prefix_cache():
 
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0), pool_pages=32)
-    with pytest.raises(ValueError, match="no shareable page identity"):
+    with pytest.raises(ValueError, match="page identity"):
         _mk_handle(cluster, "dense-reject", backend="dense", prefix=True)
     assert not cluster.pod_pool("pod0").views, \
-        "failed bind leaked its pool view"
+        "failed construction leaked a pool view"
 
 
 def test_cache_pages_out_of_quota_but_in_pod_accounting():

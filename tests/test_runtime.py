@@ -10,7 +10,8 @@ import numpy as np
 from repro.core.history import HistoryStore
 from repro.core.scheduler import GB, GlobalScheduler, Job, PodState
 from repro.runtime import (Application, Cluster, JaxExecutor, NullExecutor,
-                           measure_cluster_throughput, replay_trace)
+                           ServeOptions, measure_cluster_throughput,
+                           replay_trace)
 from repro.serving.kv_cache import Request
 
 
@@ -27,7 +28,8 @@ def test_train_and_serve_share_one_cluster():
 
     train = cluster.submit(Application.train("tinyllama-1.1b", reduced=True))
     serve = cluster.submit(Application.serve(
-        "tinyllama-1.1b", reduced=True, max_batch=2, pool_pages=32))
+        "tinyllama-1.1b", reduced=True,
+        serve=ServeOptions(max_batch=2, pool_pages=32)))
     assert train.state == "running" and serve.state == "running"
     assert cluster.capacity() != cap0      # capacity actually consumed
 
@@ -218,8 +220,10 @@ def test_serving_preemption_and_readmission():
     """Preempted requests must be re-admittable: their decode slot is
     reclaimed (regression: slot map leaked and min() hit an empty set)."""
     cluster = Cluster(pods=1, executor=JaxExecutor())
-    app = Application.serve("tinyllama-1.1b", reduced=True, max_batch=4,
-                            pool_pages=8, policy="fixed", cache_len=512)
+    app = Application.serve(
+        "tinyllama-1.1b", reduced=True,
+        serve=ServeOptions(max_batch=4, pool_pages=8, policy="fixed",
+                           cache_len=512))
     h = cluster.submit(app)
     for i in range(4):
         h.submit_request(Request(f"r{i}", prompt_len=200,

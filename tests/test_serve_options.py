@@ -1,0 +1,134 @@
+"""ServeOptions / ScalePolicy: the typed serve API surface.
+
+Construction-time validation (cross-field rules that used to fail deep
+in bind), the one-release kwargs deprecation shim, and the
+``Application.options`` mirror the executors still read.
+"""
+
+import pytest
+
+from repro.runtime import Application, ScalePolicy, ServeOptions
+
+
+# ---------------------------------------------------------------------------
+# ServeOptions validation
+# ---------------------------------------------------------------------------
+
+def test_defaults_are_valid():
+    o = ServeOptions()
+    assert o.backend == "dense" and o.replicas == 1 and o.scale is None
+
+
+@pytest.mark.parametrize("kw,match", [
+    ({"backend": "sparse"}, "backend"),
+    ({"prefix_cache": True}, "backend"),          # dense + prefix cache
+    ({"replicas": 0}, "replicas"),
+    ({"replicas": 2, "private_pool": True}, "private_pool"),
+    ({"max_batch": 0}, "max_batch"),
+    ({"policy": "generous"}, "policy"),
+    ({"weight": 0.0}, "weight"),
+    ({"replicas": 4, "scale": ScalePolicy(max_replicas=2)},
+     "max_replicas"),
+])
+def test_rejects_bad_combinations(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ServeOptions(**kw)
+
+
+def test_prefix_cache_needs_paged_moved_out_of_build_runner():
+    """The dense/prefix-cache rejection now fires at option-construction
+    time, where the traceback points at the caller's line."""
+    with pytest.raises(ValueError, match="backend"):
+        ServeOptions(backend="dense", prefix_cache=True)
+    ServeOptions(backend="paged", prefix_cache=True)   # fine
+
+
+@pytest.mark.parametrize("kw,match", [
+    ({"min_replicas": -1}, "min_replicas"),
+    ({"min_replicas": 3, "max_replicas": 2}, "max_replicas"),
+    ({"batch_min": 0}, "batch_min"),
+    ({"batch_min": 4, "batch_max": 2}, "batch_max"),
+    ({"shrink_occupancy": 0.9, "grow_occupancy": 0.5}, "occupancy"),
+    ({"unpark_lead_s": -1.0}, "unpark_lead_s"),
+])
+def test_scale_policy_validation(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ScalePolicy(**kw)
+
+
+def test_scale_policy_dimension_flags():
+    assert not ScalePolicy().scales_replicas
+    assert ScalePolicy(max_replicas=3).scales_replicas
+    assert ScalePolicy(min_replicas=0).scales_replicas   # scale-to-zero
+    assert not ScalePolicy().scales_batch
+    assert ScalePolicy(batch_max=8).scales_batch
+
+
+def test_from_kwargs_rejects_unknown_keys():
+    with pytest.raises(TypeError, match="max_batches"):
+        ServeOptions.from_kwargs({"max_batches": 4})    # typo
+
+
+def test_options_are_frozen():
+    o = ServeOptions(max_batch=4)
+    with pytest.raises(AttributeError):
+        o.max_batch = 8
+
+
+# ---------------------------------------------------------------------------
+# Application.serve integration: typed path, shim, mirror
+# ---------------------------------------------------------------------------
+
+def test_serve_typed_path_no_warning(recwarn):
+    app = Application.serve("tinyllama-1.1b", reduced=True,
+                            serve=ServeOptions(max_batch=4, replicas=2))
+    assert app.serve_options.replicas == 2
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_serve_legacy_kwargs_deprecated_but_equivalent():
+    with pytest.warns(DeprecationWarning, match="max_batch"):
+        legacy = Application.serve("tinyllama-1.1b", reduced=True,
+                                   max_batch=4, backend="paged",
+                                   pool_pages=32)
+    typed = Application.serve("tinyllama-1.1b", reduced=True,
+                              serve=ServeOptions(max_batch=4,
+                                                 backend="paged",
+                                                 pool_pages=32))
+    assert legacy.serve_options == typed.serve_options
+    assert legacy.options == typed.options
+
+
+def test_serve_rejects_mixing_serve_and_kwargs():
+    with pytest.raises(TypeError, match="not both"):
+        Application.serve("tinyllama-1.1b", reduced=True,
+                          serve=ServeOptions(), max_batch=4)
+
+
+def test_options_dict_mirrors_typed_surface():
+    """Executors read ``opts`` via ServeOptions; the legacy ``options``
+    dict stays populated for anything still introspecting it."""
+    app = Application.serve("tinyllama-1.1b", reduced=True,
+                            serve=ServeOptions(max_batch=4, weight=2.0))
+    assert app.options["max_batch"] == 4
+    assert app.options["weight"] == 2.0
+    assert app.options == app.serve_options.asdict()
+
+
+def test_from_callable_serve_passthrough():
+    from repro.core.annotations import app_limit
+
+    @app_limit(max_hbm_bytes=1 << 30)
+    def my_app():
+        from repro.configs import get_config
+        from repro.configs.reduced import reduced_config
+        return reduced_config(get_config("tinyllama-1.1b"))
+
+    app = Application.from_callable(my_app, kind="serve",
+                                    shape="decode_32k",
+                                    serve=ServeOptions(max_batch=2))
+    assert app.serve_options.max_batch == 2
+    with pytest.raises(TypeError, match="kind='serve'"):
+        Application.from_callable(my_app, kind="train",
+                                  serve=ServeOptions())

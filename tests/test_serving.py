@@ -11,7 +11,8 @@ from conftest import reduced_config
 from repro.configs import get_config
 from repro.core.history import HistoryStore
 from repro.models import ImplConfig, build_model
-from repro.runtime import Application, Cluster, JaxExecutor, NullExecutor
+from repro.runtime import (Application, Cluster, JaxExecutor, NullExecutor,
+                           ServeOptions)
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import (PAGE_SIZE, PageGroups, PagePool, Request,
                                     page_table, pool_pages_for_budget)
@@ -148,9 +149,11 @@ def test_shared_pool_two_apps_fair_preemption():
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=14)
     a = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="app-a", max_batch=4))
+                                         name="app-a",
+                                         serve=ServeOptions(max_batch=4)))
     b = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="app-b", max_batch=4))
+                                         name="app-b",
+                                         serve=ServeOptions(max_batch=4)))
     shared = a.engine.pool.shared
     assert isinstance(shared, SharedPagePool)
     assert b.engine.pool.shared is shared, "one physical pool per pod"
@@ -182,9 +185,9 @@ def test_shared_pool_two_apps_fair_preemption():
 
 def test_shared_pool_quota_enforced():
     cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=16)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="quota-app", max_batch=4,
-                                         quota_pages=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="quota-app",
+        serve=ServeOptions(max_batch=4, quota_pages=2)))
     h.submit_request(Request("small", PAGE_SIZE - 4, 4))
     big = Request("big", PAGE_SIZE * 3, 4)     # needs 4 pages > quota 2:
     h.submit_request(big)                      # can never complete
@@ -207,11 +210,12 @@ def test_quota_pressure_does_not_preempt_cotenants():
     preemption of innocent neighbours (regression: quota-bound growth
     preempted other apps and livelocked)."""
     cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=32)
-    a = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="capped", max_batch=4,
-                                         quota_pages=3))
-    b = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="bystander", max_batch=4))
+    a = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="capped",
+        serve=ServeOptions(max_batch=4, quota_pages=3)))
+    b = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="bystander",
+        serve=ServeOptions(max_batch=4)))
     for i in range(2):       # each needs 2 pages by completion; 4 > quota 3
         a.submit_request(Request(f"a{i}", PAGE_SIZE - 4, 132))
     for i in range(2):
@@ -277,9 +281,9 @@ def test_engine_rejects_request_larger_than_pool():
 
 def test_private_pool_opt_out():
     cluster = Cluster(pods=1, executor=NullExecutor(), pool_pages=64)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="loner", private_pool=True,
-                                         pool_pages=8))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="loner",
+        serve=ServeOptions(private_pool=True, pool_pages=8)))
     assert isinstance(h.engine.pool, PagePool)
     assert not hasattr(h.engine.pool, "shared")
     assert not cluster.pod_pool("pod0").views     # nothing registered
@@ -296,9 +300,10 @@ def _serve_tokens(backend: str, *, pool_pages=32, n=3, prompt=200,
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
     app = Application.serve(arch, reduced=True,
-                            max_batch=max_batch, pool_pages=pool_pages,
-                            cache_len=512, policy=policy, backend=backend,
-                            **opts)
+                            serve=ServeOptions(
+                                max_batch=max_batch, pool_pages=pool_pages,
+                                cache_len=512, policy=policy,
+                                backend=backend, **opts))
     h = cluster.submit(app)
     reqs = [Request(f"r{i}", prompt_len=prompt, max_new_tokens=max_new)
             for i in range(n)]
@@ -351,8 +356,9 @@ def test_failed_bind_leaks_neither_job_nor_pool_view():
     cluster = Cluster(pods=1, executor=JaxExecutor(), pool_pages=12)
     cap0 = cluster.capacity()
     with pytest.raises(ValueError, match="backend"):
-        cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="bad", backend="sparse"))
+        cluster.submit(Application.serve(
+            "tinyllama-1.1b", reduced=True, name="bad",
+            serve=ServeOptions(backend="sparse")))
     assert not cluster.pod_pool("pod0").views, "orphan PoolView left behind"
     assert cluster.capacity() == cap0
 
@@ -415,9 +421,10 @@ def test_swa_ring_page_cap_long_generation():
     past them -- the acceptance bound of the ring design."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
-    h = cluster.submit(Application.serve("gemma3-12b", reduced=True,
-                                         max_batch=2, pool_pages=32,
-                                         backend="paged", policy="fixed"))
+    h = cluster.submit(Application.serve(
+        "gemma3-12b", reduced=True,
+        serve=ServeOptions(max_batch=2, pool_pages=32, backend="paged",
+                           policy="fixed")))
     ring = h.runner.groups.ring_pages
     req = Request("long", prompt_len=64, max_new_tokens=PAGE_SIZE * 3)
     h.submit_request(req)
@@ -439,9 +446,9 @@ def test_paged_prefill_has_no_dense_detour():
     plus transient ``n_pages * PAGE_SIZE`` allocation it existed for)."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
-    h = cluster.submit(Application.serve("gemma3-12b", reduced=True,
-                                         max_batch=2, pool_pages=32,
-                                         backend="paged"))
+    h = cluster.submit(Application.serve(
+        "gemma3-12b", reduced=True,
+        serve=ServeOptions(max_batch=2, pool_pages=32, backend="paged")))
 
     def boom(*a, **k):
         raise AssertionError("dense model.prefill called by PagedRunner")
@@ -460,9 +467,10 @@ def test_runner_state_evicted_on_completion(backend):
     the tokens move to ``req.output_tokens``."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         max_batch=4, pool_pages=32,
-                                         cache_len=512, backend=backend))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True,
+        serve=ServeOptions(max_batch=4, pool_pages=32, cache_len=512,
+                           backend=backend)))
     reqs = [Request(f"r{i}", 40, 5) for i in range(6)]
     for r in reqs:
         h.submit_request(r)
@@ -483,9 +491,9 @@ def test_paged_decode_compile_count_is_bounded():
     compiles, not O(steps)."""
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=JaxExecutor(seed=0))
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         max_batch=4, pool_pages=64,
-                                         backend="paged"))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True,
+        serve=ServeOptions(max_batch=4, pool_pages=64, backend="paged")))
     # batch size varies every few steps: 1 -> 3 -> 4 -> shrink as they
     # finish; page grants vary with prompt length
     h.submit_request(Request("a", 40, 30))

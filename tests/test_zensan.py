@@ -83,11 +83,13 @@ def test_clean_null_engine_serving(san):
     every step's quiescent check stays green."""
     from repro.runtime.cluster import Application, Cluster
     from repro.runtime.executors import NullExecutor
+    from repro.runtime.options import ServeOptions
 
     cluster = Cluster(pods=1, history=HistoryStore(),
                       executor=NullExecutor(), pool_pages=16)
-    h = cluster.submit(Application.serve("tinyllama-1.1b", reduced=True,
-                                         name="zs", max_batch=2))
+    h = cluster.submit(Application.serve(
+        "tinyllama-1.1b", reduced=True, name="zs",
+        serve=ServeOptions(max_batch=2)))
     for i in range(3):
         h.submit_request(Request(f"r{i}", PAGE_SIZE - 4, 6))
     for _ in range(200):
